@@ -1,0 +1,133 @@
+"""Shared benchmark scaffolding.
+
+Testbed model (paper §IV-B): two data centers, 2 DTNs each, collaborators
+mounting everything.  Links are modeled by the rpc Channel: intra-DC ops are
+cheap (loopback + real serialization), cross-DC ops pay a per-message
+latency — the knob that plays the role of NFS/IB round-trips.  All reported
+numbers are measured wall-clock on this CPU container; the paper's *ratios
+and trends* are the reproduction target, not absolute MB/s (DESIGN.md §8).
+
+The **baseline** is the paper's: a UnionFS-style FUSE unification layer —
+no hash placement, so metadata ops broadcast to every branch (directory
+union semantics), while data still lands on one store.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Collaboration, NativeSession, Workspace
+from repro.core.rpc import Channel, RpcClient
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+#: per-message one-way latency for ops that cross the metadata plane (s).
+META_LAT = 5e-6
+#: extra latency when the message crosses data centers (ESnet-class RTT is
+#: ~10ms; scaled down so benches stay quick — ratios preserved).
+CROSS_DC_LAT = 50e-6
+#: data-plane bandwidth (bytes/s) for cross-DC transfers (100 Gb/s link).
+CROSS_BW_GBPS = 100.0
+#: per-DC PFS: Lustre-like per-op latency + bandwidth (paper: PFS below IB
+#: rate).  These make small-block I/O latency-bound on the *store*, so the
+#: FUSE/metadata overhead lands in the paper's 2–70% window, not 100×.
+STORE_GBPS = 1.5
+STORE_LAT = 1.2e-3
+
+
+def make_collab(
+    *,
+    n_dcs: int = 2,
+    dtns_per_dc: int = 2,
+    store_gbps: float = STORE_GBPS,
+    store_lat_s: float = STORE_LAT,
+) -> Collaboration:
+    def channels(from_dc: str, to_dc: str) -> Channel:
+        if from_dc == to_dc:
+            return Channel(name="intra", latency_s=META_LAT)
+        return Channel(name="cross", latency_s=META_LAT + CROSS_DC_LAT, gbps=CROSS_BW_GBPS)
+
+    collab = Collaboration(channel_policy=channels)
+    for i in range(n_dcs):
+        collab.add_datacenter(
+            f"dc{i}", n_dtns=dtns_per_dc, store_gbps=store_gbps, store_lat_s=store_lat_s
+        )
+    return collab
+
+
+class UnionFSBaseline:
+    """The paper's comparison system: FUSE unification of all DC mounts.
+
+    Every metadata op (getattr/lookup) is broadcast to all branches (no
+    placement function); create/write/flush follow the same five-op FUSE
+    sequence the paper measures.  Data lands on the collaborator's home DC.
+    """
+
+    def __init__(self, collab: Collaboration, collaborator: str, home_dc: str):
+        self.collab = collab
+        self.collaborator = collaborator
+        self.home_dc = home_dc
+        self._meta: List[RpcClient] = [
+            RpcClient(dtn.metadata_server, collab.channel_policy(home_dc, dtn.dc_id))
+            for dtn in collab.dtns
+        ]
+        self._data = {
+            dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
+        }
+
+    def _broadcast(self, method: str, **kw) -> list:
+        return [c.call(method, **kw) for c in self._meta]
+
+    def write(self, path: str, data: bytes) -> int:
+        parent = path.rsplit("/", 1)[0] or "/"
+        self._broadcast("getattr", path=parent)      # 1 getattr (union: all)
+        self._broadcast("lookup", path=path)         # 2 lookup  (union: all)
+        self._meta[0].call(                          # 3 create on first branch
+            "create", path=path, owner=self.collaborator,
+            dc_id=self.home_dc, ns_id=0, is_dir=False, sync=True,
+        )
+        self.collab.dc(self.home_dc).backend.write(path, data, owner=self.collaborator)
+        self._meta[0].call("update", path=path, size=len(data), sync=True)  # 5 flush
+        return len(data)
+
+    def create(self, path: str) -> None:
+        self.write(path, b"")
+
+    def read(self, path: str) -> bytes:
+        self._broadcast("lookup", path=path)
+        entry = None
+        for c in self._meta:
+            entry = entry or c.call("getattr", path=path)
+        data = self.collab.dc(entry["dc_id"]).backend.read(path)
+        if entry["dc_id"] != self.home_dc:
+            self._data[entry["dc_id"]].transmit(len(data))
+        return data
+
+    def find_by_name(self, name_sub: str) -> List[str]:
+        """Filename-substring search: exhaustive listing (no attribute index)."""
+        out = []
+        for c in self._meta:
+            for e in c.call("list_all", requester=self.collaborator):
+                if name_sub in e["path"]:
+                    out.append(e["path"])
+        return sorted(set(out))
+
+
+def timed(fn: Callable[[], Any]) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    return os.path.abspath(path)

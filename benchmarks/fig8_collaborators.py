@@ -1,0 +1,79 @@
+"""Fig. 8 — aggregate throughput vs collaborator count (1–24), 512 KB blocks.
+
+Paper claims: all three systems scale with collaborators; at 24
+collaborators native access beats the workspace path by ~16% (write) /
+~28% (read).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import UnionFSBaseline, make_collab, save_result
+from repro.core import NativeSession, Workspace
+
+BLOCK = 512 << 10
+PER_COLLAB_BYTES = 2 << 20
+COLLABS = [1, 4, 8, 16, 24]
+
+
+def _throughput(mk_writer, n_collab: int, prefix: str) -> float:
+    data = os.urandom(BLOCK)
+    n_blocks = max(PER_COLLAB_BYTES // BLOCK, 1)
+
+    def one(c: int) -> None:
+        w = mk_writer(c)
+        for i in range(n_blocks):
+            w.write(f"{prefix}/c{c}/b{i:04d}.bin", data)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=n_collab) as pool:
+        list(pool.map(one, range(n_collab)))
+    return n_collab * n_blocks * BLOCK / (time.perf_counter() - t0)
+
+
+def run(quick: bool = False) -> Dict:
+    counts = COLLABS[:3] if quick else COLLABS
+    out: Dict = {"collaborators": counts, "write": {"baseline": [], "scispace": [], "scispace_lw": []}}
+    for n in counts:
+        collab = make_collab()
+        dcs = list(collab.datacenters)
+        out["write"]["baseline"].append(
+            _throughput(lambda c: UnionFSBaseline(collab, f"u{c}", dcs[c % len(dcs)]), n, "/ub")
+        )
+        out["write"]["scispace"].append(
+            _throughput(
+                lambda c: Workspace(collab, f"w{c}", dcs[c % len(dcs)], extraction_mode="none"),
+                n,
+                "/ws",
+            )
+        )
+        # LW: collaborators divided over the DCs, writing natively
+        out["write"]["scispace_lw"].append(
+            _throughput(lambda c: NativeSession(collab.dc(dcs[c % len(dcs)]), f"n{c}"), n, "/nv")
+        )
+        collab.close()
+    lw = np.array(out["write"]["scispace_lw"][-1])
+    base = np.array(out["write"]["baseline"][-1])
+    out["lw_gain_at_max_pct"] = float((lw - base) / base * 100)
+    out["paper_claim"] = "~16% write boost for native access at 24 collaborators"
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    res = run(quick)
+    print("fig8 collaborator scaling (write MB/s):")
+    for sysname, vals in res["write"].items():
+        print(f"  {sysname:12s} " + " ".join(f"{v/1e6:8.1f}" for v in vals))
+    print(f"  LW gain at max collaborators: {res['lw_gain_at_max_pct']:+.0f}% ({res['paper_claim']})")
+    save_result("fig8_collaborators", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

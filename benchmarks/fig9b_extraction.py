@@ -1,0 +1,103 @@
+"""Fig. 9b — metadata-extraction mode × attribute count, 4 collaborators.
+
+Paper claims: vs Inline-Sync, Inline-Async saves 12% (5 attrs) → 56%
+(20 attrs) and LW-Offline 36% → 62% — the write path sheds the extraction
+cost, which grows with attribute count.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import make_collab, save_result
+from repro.core import ExtractionMode, NativeSession, Workspace
+
+N_FILES_PER_COLLAB = 60
+N_COLLABS = 4
+ATTR_COUNTS = [5, 20]
+
+
+def _attrs(n: int, i: int) -> Dict:
+    out = {}
+    for a in range(n):
+        kind = a % 3
+        if kind == 0:
+            out[f"attr{a}"] = i * 31 + a
+        elif kind == 1:
+            out[f"attr{a}"] = float(i) + a / 7.0
+        else:
+            out[f"attr{a}"] = f"value-{i}-{a}"
+    return out
+
+
+def _write_all(mk_writer, n_attrs: int, prefix: str, *, offline: bool = False) -> float:
+    arrays = {"x": np.zeros(256, np.float32)}
+
+    def one(c: int) -> None:
+        w = mk_writer(c)
+        paths = []
+        for i in range(N_FILES_PER_COLLAB):
+            p = f"{prefix}/c{c}/f{i:04d}.sci"
+            w.write_scidata(p, arrays, _attrs(n_attrs, i))
+            paths.append(p)
+        if offline:
+            w.offline_index(paths)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=N_COLLABS) as pool:
+        list(pool.map(one, range(N_COLLABS)))
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False) -> Dict:
+    out: Dict = {"attr_counts": ATTR_COUNTS, "modes": {}}
+    for n_attrs in ATTR_COUNTS:
+        collab = make_collab()
+        dcs = list(collab.datacenters)
+        sync_t = _write_all(
+            lambda c: Workspace(collab, f"s{c}", dcs[c % 2], extraction_mode=ExtractionMode.INLINE_SYNC),
+            n_attrs, f"/sync{n_attrs}",
+        )
+        async_t = _write_all(
+            lambda c: Workspace(collab, f"a{c}", dcs[c % 2], extraction_mode=ExtractionMode.INLINE_ASYNC),
+            n_attrs, f"/async{n_attrs}",
+        )
+        off_t = _write_all(
+            lambda c: NativeSession(collab.dc(dcs[c % 2]), f"o{c}"),
+            n_attrs, f"/off{n_attrs}", offline=True,
+        )
+        out["modes"].setdefault("inline_sync_s", []).append(sync_t)
+        out["modes"].setdefault("inline_async_s", []).append(async_t)
+        out["modes"].setdefault("lw_offline_s", []).append(off_t)
+        collab.close()
+    sync = np.array(out["modes"]["inline_sync_s"])
+    out["async_gain_pct"] = [float(x) for x in (1 - np.array(out["modes"]["inline_async_s"]) / sync) * 100]
+    out["offline_gain_pct"] = [float(x) for x in (1 - np.array(out["modes"]["lw_offline_s"]) / sync) * 100]
+    out["paper_claim"] = "async 12→56%, LW-offline 36→62% faster than sync as attrs 5→20"
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    res = run(quick)
+    print("fig9b extraction modes (seconds, 4 collaborators):")
+    print(f"  {'attrs':>6s} {'sync':>8s} {'async':>8s} {'offline':>8s}")
+    for i, n in enumerate(res["attr_counts"]):
+        print(
+            f"  {n:6d} {res['modes']['inline_sync_s'][i]:8.2f}"
+            f" {res['modes']['inline_async_s'][i]:8.2f}"
+            f" {res['modes']['lw_offline_s'][i]:8.2f}"
+        )
+    print(
+        f"  gains vs sync: async {['%.0f%%' % g for g in res['async_gain_pct']]}, "
+        f"offline {['%.0f%%' % g for g in res['offline_gain_pct']]} ({res['paper_claim']})"
+    )
+    save_result("fig9b_extraction", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

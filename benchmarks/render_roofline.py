@@ -1,0 +1,37 @@
+"""Render the §Roofline markdown table from results/dryrun_all.json."""
+
+import json
+import sys
+
+
+def main(path="results/dryrun_all.json"):
+    recs = json.load(open(path))
+    out = []
+    hdr = (
+        "| arch | shape | mesh | peak GB/chip | t_compute s | t_memory s | "
+        "t_collective s | bottleneck | useful | roofline |"
+    )
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for r in recs:
+        if r["status"] == "SKIP":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"SKIP ({r['reason'].split('(')[0].strip()}) | — | — |"
+            )
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['mem']['peak_est_gb']:.1f} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |"
+        )
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

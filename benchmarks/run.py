@@ -1,0 +1,83 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-dryrun]
+
+Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
+  fig7   block-size sweep          fig8   collaborator scaling
+  fig9a  MEU export                fig9b  extraction modes
+  tab2   query latency/hit-ratio   fig9c  end-to-end analysis
+Framework:
+  ckpt_stall  LW+MEU vs workspace checkpointing
+  dryrun      one representative cell (full table: results/dryrun_all.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks import (
+    ckpt_stall,
+    fig7_blocksize,
+    fig8_collaborators,
+    fig9a_meu,
+    fig9b_extraction,
+    fig9c_end2end,
+    tab2_query,
+)
+from benchmarks.common import RESULTS_DIR
+
+
+def _dryrun_sample() -> int:
+    """Compile a representative train cell with 512 host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "gemma2-2b", "--shape", "train_4k",
+        "--out", os.path.join(RESULTS_DIR, "dryrun_sample.json"),
+    ]
+    return subprocess.call(cmd, env=env)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="reduced sweep sizes")
+    ap.add_argument("--skip-dryrun", action="store_true")
+    args = ap.parse_args(argv)
+
+    benches = [
+        ("fig7_blocksize", fig7_blocksize.main),
+        ("fig8_collaborators", fig8_collaborators.main),
+        ("fig9a_meu", fig9a_meu.main),
+        ("fig9b_extraction", fig9b_extraction.main),
+        ("tab2_query", tab2_query.main),
+        ("fig9c_end2end", fig9c_end2end.main),
+        ("ckpt_stall", ckpt_stall.main),
+    ]
+    failures = 0
+    t0 = time.time()
+    for name, fn in benches:
+        print(f"\n=== {name} ===")
+        try:
+            fn(quick=args.quick)
+        except Exception as exc:  # noqa: BLE001
+            failures += 1
+            import traceback
+
+            traceback.print_exc()
+            print(f"BENCH FAIL {name}: {exc}")
+    if not args.skip_dryrun:
+        print("\n=== dryrun sample (full sweep: results/dryrun_all.json) ===")
+        if _dryrun_sample() != 0:
+            failures += 1
+    print(f"\nbenchmarks done in {time.time()-t0:.0f}s, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

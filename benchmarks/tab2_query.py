@@ -1,0 +1,87 @@
+"""Table II — search-query latency vs hit-ratio (0/25/50/75/100 %).
+
+Paper claims: latency grows ~linearly with hit ratio — the cost is message
+packing/unpacking of the reply rows at the SDS, not the SQL probe; four
+query types (two text =, one text-ish =, one int =) behave identically.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import make_collab, save_result
+from repro.core import ExtractionMode, Workspace
+
+N_FILES = 400
+N_QUERIES = 40
+N_COLLABS = 4
+HIT_RATIOS = [0.0, 0.25, 0.5, 0.75, 1.0]
+
+LOCATIONS = ["pacific", "atlantic", "arctic", "indian"]
+INSTRUMENTS = ["modis", "viirs", "seawifs", "meris"]
+
+
+def _populate(ws, ratio: float, prefix: str) -> None:
+    """hit-ratio r ⇒ r·N files match the probe value, rest don't."""
+    arrays = {"x": np.zeros(16, np.float32)}
+    n_hit = int(N_FILES * ratio)
+    for i in range(N_FILES):
+        hit = i < n_hit
+        ws.write_scidata(
+            f"{prefix}/f{i:05d}.sci",
+            arrays,
+            {
+                "location": "pacific" if hit else LOCATIONS[1 + i % 3],
+                "instrument": "modis" if hit else INSTRUMENTS[1 + i % 3],
+                "date": "2018-03-01" if hit else f"2018-04-{i % 28 + 1:02d}",
+                "daynight": 1 if hit else 0,
+            },
+        )
+
+
+QUERIES = [
+    ("location (text)", "location = pacific"),
+    ("instrument (text)", "instrument = modis"),
+    ("date (text)", "date = 2018-03-01"),
+    ("daynight (int)", "daynight = 1"),
+]
+
+
+def run(quick: bool = False) -> Dict:
+    ratios = HIT_RATIOS[::2] if quick else HIT_RATIOS
+    out: Dict = {"hit_ratios": ratios, "latency_s": {name: [] for name, _ in QUERIES}}
+    for ratio in ratios:
+        collab = make_collab()
+        ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+        _populate(ws, ratio, f"/q{int(ratio*100)}")
+        clients = [Workspace(collab, f"c{i}", "dc0") for i in range(N_COLLABS)]
+        for name, q in QUERIES:
+            def burst(ws_i):
+                for _ in range(N_QUERIES // N_COLLABS):
+                    ws_i.search(q)
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(max_workers=N_COLLABS) as pool:
+                list(pool.map(burst, clients))
+            out["latency_s"][name].append(time.perf_counter() - t0)
+        collab.close()
+    out["paper_claim"] = "latency ~linear in hit ratio (reply packing dominates)"
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    res = run(quick)
+    print("tab2 query latency (s for %d queries):" % N_QUERIES)
+    hdr = " ".join(f"{int(r*100):>6d}%" for r in res["hit_ratios"])
+    print(f"  {'query':20s} {hdr}")
+    for name, vals in res["latency_s"].items():
+        print(f"  {name:20s} " + " ".join(f"{v:7.3f}" for v in vals))
+    save_result("tab2_query", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""The paper's scientific workflow, end to end (Fig. 1 → Fig. 9c).
+
+Scientists at two HPC sites produce ocean-surface granules; a third analyst
+runs a cross-site comparison (H5Diff analogue) WITHOUT manual transfers:
+
+  1. producers write granules natively at their own site (SCISPACE-LW),
+  2. each site runs one MEU export (batched metadata commit),
+  3. LW-Offline indexing makes granules attribute-searchable,
+  4. the analyst's single attribute query locates pairs across both sites,
+  5. the analysis reads both sides through the workspace, in place.
+
+Also demonstrates template namespaces: a private scratch namespace stays
+invisible to the analyst.
+
+    PYTHONPATH=src python examples/collaboration_workflow.py
+"""
+
+import numpy as np
+
+from repro.core import MEU, Collaboration, ExtractionMode, NativeSession, Workspace
+
+
+def produce(collab, dc_id: str, scientist: str, n: int, location: str) -> None:
+    native = NativeSession(collab.dc(dc_id), scientist)
+    rng = np.random.default_rng(hash(dc_id) % 2**32)
+    paths = []
+    for i in range(n):
+        p = f"/campaign/{dc_id}/granule{i:03d}.sci"
+        native.write_scidata(
+            p,
+            {"sst": rng.standard_normal(1024).astype(np.float32)},
+            {"location": location, "instrument": "modis", "pair_id": i},
+        )
+        paths.append(p)
+    # private scratch that must NOT appear in the shared view
+    native.write(f"/scratch/{scientist}/notes.txt", b"work in progress")
+    MEU(collab, collab.dc(dc_id), scientist).export("/campaign")
+    collab.dc(dc_id).offline_index(paths)
+    print(f"{scientist}@{dc_id}: produced {n} granules, 1 MEU export")
+
+
+def main() -> None:
+    collab = Collaboration()
+    collab.add_datacenter("ornl", n_dtns=2)
+    collab.add_datacenter("nersc", n_dtns=2)
+    # template namespaces: the campaign is global, scratch is per-scientist
+    collab.define_namespace("campaign", "global", "pi", "/campaign")
+    collab.define_namespace("scratch-s1", "local", "s1", "/scratch/s1")
+    collab.define_namespace("scratch-s2", "local", "s2", "/scratch/s2")
+
+    produce(collab, "ornl", "s1", 6, "pacific")
+    produce(collab, "nersc", "s2", 6, "atlantic")
+
+    analyst = Workspace(collab, "analyst", "ornl", extraction_mode=ExtractionMode.NONE)
+    print("\nanalyst's unified view:",
+          len(analyst.find("/campaign")), "entries;",
+          "scratch visible:", bool(analyst.find("/scratch")))
+
+    pac = sorted(analyst.search_paths("location = pacific"))
+    atl = sorted(analyst.search_paths("location = atlantic"))
+    print(f"discovery: {len(pac)} pacific + {len(atl)} atlantic granules")
+
+    total_diff = 0
+    for a, b in zip(pac, atl):
+        xa = analyst.read_dataset(a, "sst")
+        xb = analyst.read_dataset(b, "sst")
+        total_diff += int((~np.isclose(xa, xb)).sum())
+    print(f"H5Diff analogue over {len(pac)} pairs: {total_diff} differing elements")
+    print("no dataset was copied between sites — analysis ran through the workspace")
+    collab.close()
+
+
+if __name__ == "__main__":
+    main()

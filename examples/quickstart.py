@@ -1,0 +1,57 @@
+"""Quickstart: the SCISPACE collaboration workspace in 60 seconds.
+
+Two geo-distributed "data centers" (pods), two scientists.  Bob writes
+natively at his site (fast path), exports metadata with MEU, and Alice —
+mounting the same collaboration workspace from the other site — finds his
+dataset by *attribute search* and reads it without knowing where it lives.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    MEU,
+    Collaboration,
+    ExtractionMode,
+    NativeSession,
+    Workspace,
+)
+
+
+def main() -> None:
+    # -- the collaboration fabric: 2 DCs × 2 DTNs ------------------------------
+    collab = Collaboration()
+    collab.add_datacenter("ornl", n_dtns=2)
+    collab.add_datacenter("nersc", n_dtns=2)
+
+    # -- Bob (NERSC) writes a dataset natively — no workspace overhead ---------
+    bob = NativeSession(collab.dc("nersc"), "bob")
+    sst = np.random.default_rng(0).standard_normal((64, 64)).astype(np.float32)
+    bob.write_scidata(
+        "/projects/ocean/sst_2018_03.sci",
+        {"sst": sst},
+        {"location": "pacific", "instrument": "modis", "daynight": 1},
+    )
+    print("bob wrote /projects/ocean/sst_2018_03.sci natively at nersc")
+
+    # -- one batched metadata export publishes it to the workspace -------------
+    report = MEU(collab, collab.dc("nersc"), "bob").export("/projects")
+    print(f"MEU exported {report.exported_files} file(s) in {report.rpc_calls} RPC(s)")
+    # index it for attribute search (LW-Offline mode)
+    collab.dc("nersc").offline_index(["/projects/ocean/sst_2018_03.sci"])
+
+    # -- Alice (ORNL) mounts the workspace and discovers it --------------------
+    alice = Workspace(collab, "alice", "ornl", extraction_mode=ExtractionMode.NONE)
+    hits = alice.search_paths("location = pacific")
+    print("alice's search 'location = pacific' ->", hits)
+    data = alice.read_dataset(hits[0], "sst")
+    print(f"alice read {data.shape} {data.dtype} — matches bob's: {np.array_equal(data, sst)}")
+
+    # -- unified namespace view -------------------------------------------------
+    print("workspace view:", [e["path"] for e in alice.find("/projects")])
+    collab.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests + continuous batching.
+
+Boots the engine on a reduced RWKV-6 (attention-free ⇒ O(1) decode state),
+submits a burst of variable-length requests, and streams tokens as slots
+free and refill — the production serving loop at example scale.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, smoke_variant
+from repro.models.model import Model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    cfg = smoke_variant(ARCHS["rwkv6-7b"]).replace(d_model=128, n_layers=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"serving {cfg.name}: {n/1e6:.2f}M params, 4 slots, greedy")
+
+    eng = ServeEngine(model, params, ServeConfig(max_len=128, slots=4, eos_token=-1))
+    rng = np.random.default_rng(0)
+    requests = [
+        eng.submit(rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 32))), max_new=12)
+        for _ in range(10)
+    ]
+    stats = eng.run_until_drained(requests)
+    for r in requests[:3]:
+        print(f"  request {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+    print(
+        f"served {stats['requests']:.0f} requests / {stats['tokens']:.0f} tokens "
+        f"in {stats['steps']:.0f} engine steps ({stats['tok_per_s']:.1f} tok/s on CPU)"
+    )
+    assert all(r.done for r in requests)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end driver: train a ~100M-parameter LM with the full stack.
+
+Everything is live: config system → model (gemma2 family, scaled to ~100M)
+→ sharded synthetic data pipeline → AdamW + cosine → fault-tolerant trainer
+→ SCISPACE checkpointing (local-write + MEU export, SDS-discoverable) — and
+a mid-run simulated node failure that restarts from the latest published
+checkpoint.
+
+    PYTHONPATH=src python examples/train_end_to_end.py --steps 200
+
+On this CPU container each step is ~1–3 s (real fwd+bwd of the 100M model);
+defaults train a few hundred steps.  On a TPU fleet the same script runs
+with --mesh data,model and the production launcher.
+"""
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.core import Collaboration
+from repro.data import ShardedPipeline, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.optim import AdamW, AdamWConfig
+from repro.train import CheckpointManager, FaultInjector, Trainer, TrainerConfig
+
+
+def build_100m_config():
+    """Gemma2-family config scaled to ~100M params (exact count printed)."""
+    return get_config("gemma2-2b").replace(
+        name="gemma2-100m",
+        d_model=768,
+        n_layers=12,
+        n_heads=12,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=3072,
+        vocab_size=32_768,
+        attn_window=256,
+        dtype="float32",
+        param_dtype="float32",
+        attn_chunk_q=128,
+        attn_chunk_kv=128,
+        remat="none",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=2)
+    ap.add_argument("--fail-at", type=int, default=0, help="inject a node failure at this step")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = build_100m_config()
+    model = Model(cfg)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(model.init_abstract()))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M")
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    opt = AdamW(AdamWConfig(peak_lr=3e-3, warmup_steps=20, total_steps=args.steps))
+    pipe = ShardedPipeline(
+        SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len, period=16, vocab_eff=512),
+        global_batch=args.global_batch,
+    )
+
+    # SCISPACE checkpoint plane: this pod's DC + a peer DC
+    collab = Collaboration()
+    collab.add_datacenter("pod0", n_dtns=2)
+    collab.add_datacenter("peer", n_dtns=2)
+    ckpt = CheckpointManager(collab, run="e2e-100m", home_dc="pod0", n_shards=2)
+
+    fail = FaultInjector(fail_at=[args.fail_at]) if args.fail_at else None
+    trainer = Trainer(
+        model, opt, mesh, pipe,
+        TrainerConfig(loss_chunk=min(args.seq_len, 128), ckpt_every=args.ckpt_every),
+        ckpt=ckpt, fault_hook=fail,
+    )
+    result = trainer.run(args.steps)
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    print(json.dumps({
+        **result,
+        "first_loss": losses[0],
+        "last_loss": losses[-1],
+        "ckpt_steps_discovered_via_sds": ckpt.list_steps(),
+    }, indent=1))
+    assert losses[-1] < losses[0], "loss should decrease on the synthetic language"
+    collab.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""internvl2-2b — VLM: InternViT frontend + InternLM2 LM [arXiv:2404.16821].
+
+Assigned: 24L, d_model=2048, 16H (GQA kv=8), d_ff=8192, vocab=92553.
+Per the assignment the vision frontend (InternViT-300M) is a STUB:
+``input_specs()`` supplies precomputed patch embeddings (1024-dim, 256
+tokens per image) which are projected and spliced into the token stream;
+the 24L InternLM2-1.8B-style backbone is implemented in full.
+"""
+
+from .base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    d_model=2048,
+    n_layers=24,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    vocab_size=92553,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    activation="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    frontend_dim=1024,
+    frontend_tokens=256,
+)

@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave with MoE [arXiv:2403.19887].
+
+Assigned: 32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=65536,
+MoE 16 experts top-2.
+
+Jamba's block is an 8-layer unit with exactly one attention layer (index 4)
+and MoE replacing the MLP on every other layer (odd indices) — 1:7
+attention:mamba ratio and e=2 MoE period, per the paper.  Mamba mixers make
+the arch sub-quadratic: ``long_500k`` runs (attention layers decode O(S)
+against their KV cache; the SSM state is O(1)).
+"""
+
+from .base import LayerSpec, MambaSpec, ModelConfig, MoESpec
+
+_UNIT = tuple(
+    LayerSpec(
+        mixer="attn" if i == 4 else "mamba",
+        ffn="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    d_model=4096,
+    n_layers=32,
+    pattern=_UNIT,
+    vocab_size=65536,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    activation="swiglu",
+    norm="rmsnorm",
+    use_rope=False,          # Jamba relies on Mamba for position information
+    moe=MoESpec(n_experts=16, top_k=2, d_ff=14336),
+    mamba=MambaSpec(d_state=16, d_conv=4, expand=2),
+    sub_quadratic=True,
+)

@@ -1,0 +1,24 @@
+"""nemotron-4-15b — dense GQA with squared-ReLU MLP [arXiv:2402.16819].
+
+Assigned: 32L, d_model=6144, 48H (GQA kv=8), d_ff=24576, vocab=256000.
+Nemotron-4 signature: squared-ReLU activation, RoPE, no biases, untied
+input/output embeddings, LayerNorm.
+"""
+
+from .base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    d_model=6144,
+    n_layers=32,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    vocab_size=256000,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    activation="relu2",
+    norm="layernorm",
+    tie_embeddings=False,
+)

@@ -1,0 +1,26 @@
+"""olmoe-1b-7b — fine-grained MoE, 64 experts top-8 [arXiv:2409.02060].
+
+Assigned: 16L, d_model=2048, 16H (GQA kv=16 ⇒ MHA), d_ff=1024 per expert,
+vocab=50304, MoE 64e top-8 on every layer.  OLMoE signature: QK-RMSNorm,
+small experts, no shared expert, RMSNorm + SwiGLU.
+"""
+
+from .base import LayerSpec, ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    d_model=2048,
+    n_layers=16,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    vocab_size=50304,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    activation="swiglu",
+    norm="rmsnorm",
+    qk_norm=True,
+    moe=MoESpec(n_experts=64, top_k=8, d_ff=1024),
+    tie_embeddings=False,
+)

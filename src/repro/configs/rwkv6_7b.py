@@ -1,0 +1,23 @@
+"""rwkv6-7b — attention-free RWKV-6 "Finch" [arXiv:2404.05892].
+
+Assigned: 32L, d_model=4096, attention-free, d_ff=14336, vocab=65536.
+Finch signature: data-dependent decay time-mix (WKV recurrence with
+outer-product state), squared-ReLU channel-mix, head_dim=64.
+O(1)-state decode ⇒ ``long_500k`` runs.
+"""
+
+from .base import LayerSpec, ModelConfig, RWKVSpec
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    d_model=4096,
+    n_layers=32,
+    pattern=(LayerSpec(mixer="rwkv", ffn="rwkv_cmix"),),
+    vocab_size=65536,
+    d_ff=14336,
+    norm="layernorm",
+    use_rope=False,
+    rwkv=RWKVSpec(head_dim=64),
+    sub_quadratic=True,
+)

@@ -1,0 +1,32 @@
+"""The paper's own evaluation testbed (§IV-B, Table I) as a config.
+
+This is the SCISPACE-native configuration — not an LM architecture but the
+collaboration fabric the paper measures: 2 geo-distributed data centers,
+Lustre per DC, 2 DTNs each (4 Lustre client nodes total), 1–24
+collaborators over IB EDR.  `benchmarks.common.make_collab` instantiates
+it; the constants there map IB/Lustre characteristics onto the container's
+simulated channels (DESIGN.md §2, §8).
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+__all__ = ["TESTBED"]
+
+
+@dataclass(frozen=True)
+class TestbedConfig:
+    n_datacenters: int = 2
+    dtns_per_dc: int = 2                 # Table I: 4 DTN nodes total
+    collaborators: Tuple[int, ...] = (1, 4, 8, 16, 24)
+    network: str = "Infiniband EDR (100 Gb/s)"
+    pfs: str = "Lustre (2×MDS, 2×OSS, 11×7.2TB RAID-0 OSTs per DC)"
+    # evaluation datasets
+    synthetic_bytes: int = 375 << 30     # IOR, 375 GB
+    real_dataset: str = "MODIS-Aqua ocean surface, 116 GB / 4600 HDF5 files"
+    block_sizes: Tuple[int, ...] = (4 << 10, 16 << 10, 64 << 10, 256 << 10, 512 << 10)
+    attr_counts: Tuple[int, ...] = (5, 20)
+    hit_ratios: Tuple[float, ...] = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+TESTBED = TestbedConfig()

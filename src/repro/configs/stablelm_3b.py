@@ -1,0 +1,26 @@
+"""stablelm-3b — dense with partial rotary embeddings [hf:stabilityai/stablelm-2-1_6b].
+
+Assigned: 32L, d_model=2560, 32H (GQA kv=32 ⇒ MHA), d_ff=6912, vocab=50304.
+StableLM-2 signature: partial RoPE (25% of head dim), LayerNorm, SwiGLU,
+QKV biases, untied embeddings.
+"""
+
+from .base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    d_model=2560,
+    n_layers=32,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    vocab_size=50304,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    activation="swiglu",
+    norm="layernorm",
+    rope_fraction=0.25,
+    qkv_bias=True,
+    tie_embeddings=False,
+)

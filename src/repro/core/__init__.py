@@ -1,0 +1,72 @@
+"""SCISPACE core: the paper's contribution as a composable library.
+
+Layers (bottom-up):
+
+- :mod:`repro.core.backends`   — per-data-center PFS stand-ins (+ xattrs)
+- :mod:`repro.core.rpc`        — message codec + client/server + channels
+- :mod:`repro.core.scidata`    — self-describing scientific container (HDF5 stand-in)
+- :mod:`repro.core.metadata`   — SQLite DB shards + hash placement (Fig. 4)
+- :mod:`repro.core.namespace`  — template namespaces, local/global scopes
+- :mod:`repro.core.discovery`  — Scientific Discovery Service + 3 extraction modes
+- :mod:`repro.core.cluster`    — DTNs / data centers / collaboration fabric
+- :mod:`repro.core.workspace`  — the scifs client (unified namespace) + native access
+- :mod:`repro.core.meu`        — Metadata Export Utility (local-write export protocol)
+"""
+
+from .backends import MemoryBackend, PosixBackend, StorageBackend, SYNC_XATTR
+from .cluster import Collaboration, DataCenter, DTN
+from .discovery import AsyncIndexer, DiscoveryService, ExtractionMode
+from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement, path_hash
+from .meu import MEU, ExportReport
+from .namespace import DEFAULT_NS, Namespace, NamespaceRegistry
+from .query import Query, QueryError, parse_query
+from .rpc import Channel, RpcClient, RpcError, RpcServer, pack, unpack
+from .scidata import (
+    SciFile,
+    attr_type_of,
+    read_dataset,
+    read_header,
+    serialize_scidata,
+    write_scidata,
+)
+from .workspace import NativeSession, Workspace
+
+__all__ = [
+    "MemoryBackend",
+    "PosixBackend",
+    "StorageBackend",
+    "SYNC_XATTR",
+    "Collaboration",
+    "DataCenter",
+    "DTN",
+    "AsyncIndexer",
+    "DiscoveryService",
+    "ExtractionMode",
+    "DiscoveryShard",
+    "MetadataService",
+    "MetadataShard",
+    "hash_placement",
+    "path_hash",
+    "MEU",
+    "ExportReport",
+    "DEFAULT_NS",
+    "Namespace",
+    "NamespaceRegistry",
+    "Query",
+    "QueryError",
+    "parse_query",
+    "Channel",
+    "RpcClient",
+    "RpcError",
+    "RpcServer",
+    "pack",
+    "unpack",
+    "SciFile",
+    "attr_type_of",
+    "read_dataset",
+    "read_header",
+    "serialize_scidata",
+    "write_scidata",
+    "NativeSession",
+    "Workspace",
+]

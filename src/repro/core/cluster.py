@@ -1,0 +1,166 @@
+"""Testbed assembly: data centers, DTNs, and the collaboration fabric.
+
+Mirrors the paper's evaluation setup (§IV-B, Table I): N geo-distributed data
+centers, each with a PFS (a :class:`~repro.core.backends.StorageBackend`) and
+a set of DTNs that are (a) clients of the local PFS and (b) hosts of the
+metadata + discovery service shards.  Collaborator machines mount the
+workspace over *all* DTNs of *all* data centers.
+
+In the TPU-fleet adaptation (DESIGN.md §2) a :class:`DataCenter` is a pod and
+its DTNs are the pod's I/O host group; the cross-DC channel is the DCN.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .backends import MemoryBackend, PosixBackend, StorageBackend
+from .discovery import AsyncIndexer, DiscoveryService
+from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement
+from .namespace import NamespaceRegistry
+from .rpc import Channel, RpcServer
+
+__all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy"]
+
+
+class DTN:
+    """A data transfer node: PFS client + one metadata shard + one discovery shard."""
+
+    def __init__(self, dtn_id: int, dc_id: str, backend: StorageBackend, db_dir: Optional[str]):
+        self.dtn_id = dtn_id
+        self.dc_id = dc_id
+        self.backend = backend
+        if db_dir is None:
+            meta_db = disc_db = ":memory:"
+        else:
+            meta_db = os.path.join(db_dir, f"dtn{dtn_id}_meta.db")
+            disc_db = os.path.join(db_dir, f"dtn{dtn_id}_disc.db")
+        self.metadata_shard = MetadataShard(meta_db)
+        self.discovery_shard = DiscoveryShard(disc_db)
+        self.metadata = MetadataService(self.metadata_shard, dtn_id=dtn_id, dc_id=dc_id)
+        self.discovery = DiscoveryService(self.discovery_shard, dtn_id=dtn_id, backend=backend)
+        self.metadata_server = RpcServer(self.metadata, name=f"meta@dtn{dtn_id}")
+        self.discovery_server = RpcServer(self.discovery, name=f"sds@dtn{dtn_id}")
+        self.async_indexer: Optional[AsyncIndexer] = None
+
+    def start_async_indexer(self, **kwargs) -> AsyncIndexer:
+        if self.async_indexer is None:
+            self.async_indexer = AsyncIndexer(self.discovery, **kwargs).start()
+        return self.async_indexer
+
+    def stop(self) -> None:
+        if self.async_indexer is not None:
+            self.async_indexer.stop()
+            self.async_indexer = None
+
+    def close(self) -> None:
+        self.stop()
+        self.metadata_shard.close()
+        self.discovery_shard.close()
+
+
+class DataCenter:
+    """One HPC data center: a PFS namespace + its DTNs."""
+
+    def __init__(self, dc_id: str, backend: StorageBackend):
+        self.dc_id = dc_id
+        self.backend = backend
+        self.dtns: List[DTN] = []
+
+    def local_dtns(self) -> List[DTN]:
+        return self.dtns
+
+    def offline_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
+        """LW-Offline extraction: run SDS directly on this DC's DTNs (§III-B5).
+
+        No FUSE, no RPC: each path is indexed in-process on the DTN that owns
+        it (hash over this DC's DTNs).  Search still finds the rows because
+        queries fan out to every shard.
+        """
+        if not self.dtns:
+            raise RuntimeError(f"DC {self.dc_id} has no DTNs")
+        done = 0
+        for path in paths:
+            dtn = self.dtns[hash_placement(path, len(self.dtns))]
+            dtn.discovery.extract_and_index(path, attr_filter)
+            done += 1
+        return done
+
+
+#: (from_dc, to_dc) -> Channel.  None ⇒ free loopback everywhere.
+ChannelPolicy = Callable[[str, str], Channel]
+
+
+def _free_channels(_from_dc: str, _to_dc: str) -> Channel:
+    return Channel(name="free")
+
+
+class Collaboration:
+    """The full collaboration fabric: all DCs, all DTNs, shared namespaces.
+
+    ``channel_policy`` supplies the link model used between a collaborator's
+    home DC and each DTN's DC — benchmarks use it to model intra-DC vs
+    cross-DC (ESnet-class) links; tests leave it free.
+    """
+
+    def __init__(self, channel_policy: Optional[ChannelPolicy] = None):
+        self.datacenters: Dict[str, DataCenter] = {}
+        self.dtns: List[DTN] = []  # global DTN list; index = placement target
+        self.namespaces = NamespaceRegistry()
+        self.channel_policy: ChannelPolicy = channel_policy or _free_channels
+        self._lock = threading.Lock()
+
+    # -- construction -----------------------------------------------------------
+    def add_datacenter(
+        self,
+        dc_id: str,
+        *,
+        root: Optional[str] = None,
+        n_dtns: int = 2,
+        db_dir: Optional[str] = None,
+        store_gbps: float = 0.0,
+        store_lat_s: float = 0.0,
+    ) -> DataCenter:
+        """Add a DC.  ``root=None`` ⇒ in-memory PFS; else a PosixBackend at root."""
+        with self._lock:
+            if dc_id in self.datacenters:
+                raise ValueError(f"duplicate DC id {dc_id!r}")
+            backend: StorageBackend
+            backend = (
+                MemoryBackend(dc_id, store_gbps=store_gbps, store_lat_s=store_lat_s)
+                if root is None
+                else PosixBackend(dc_id, root)
+            )
+            dc = DataCenter(dc_id, backend)
+            for _ in range(n_dtns):
+                dtn = DTN(len(self.dtns), dc_id, backend, db_dir)
+                dc.dtns.append(dtn)
+                self.dtns.append(dtn)
+            self.datacenters[dc_id] = dc
+            return dc
+
+    def dc(self, dc_id: str) -> DataCenter:
+        return self.datacenters[dc_id]
+
+    def owner_dtn(self, path: str) -> DTN:
+        """The DTN whose shards own this pathname (hash placement, §III-B1)."""
+        return self.dtns[hash_placement(path, len(self.dtns))]
+
+    # -- namespace control (replicated to every metadata shard) ------------------
+    def define_namespace(self, name: str, scope: str, owner: str, prefix: str):
+        ns = self.namespaces.define(name, scope, owner, prefix)
+        for dtn in self.dtns:
+            dtn.metadata.put_namespace(ns.ns_id, ns.name, ns.scope, ns.owner, ns.prefix)
+        return ns
+
+    # -- lifecycle ---------------------------------------------------------------
+    def start_async_indexers(self, **kwargs) -> None:
+        for dtn in self.dtns:
+            dtn.start_async_indexer(**kwargs)
+
+    def close(self) -> None:
+        for dtn in self.dtns:
+            dtn.close()

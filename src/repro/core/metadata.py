@@ -1,0 +1,319 @@
+"""Distributed metadata management (§III-B2, Fig. 4).
+
+Every DTN hosts two SQLite database shards (the paper's prototype uses SQLite
+as the backend storage for each shard):
+
+- the **metadata shard** — file-system metadata (filename, size, owner, path,
+  data-center, namespace, the ``sync`` flag, and the pathname hash), updated
+  *synchronously* on every workspace write;
+- the **discovery shard** — indexing metadata: (attribute, file, value) rows
+  extracted from scientific dataset headers plus user-defined tags, updated
+  synchronously or asynchronously (§III-B5).
+
+Files are placed onto DTNs by hashing the file pathname ("hash-based
+placement strategy in order to eliminate the I/O broadcast problem when
+multiple DTNs host metadata service").  Directory listings fan out to all
+DTNs in parallel and merge.
+
+The paper motivates a relational store over a key-value store because the
+index needs many-to-many associations (one file ↔ many attributes); the
+schema below keeps that property.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import sqlite3
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+__all__ = [
+    "hash_placement",
+    "path_hash",
+    "MetadataShard",
+    "DiscoveryShard",
+    "MetadataService",
+]
+
+
+def path_hash(path: str) -> str:
+    """Stable pathname hash stored with each entry (Fig. 4 'File Mapping')."""
+    return hashlib.blake2b(path.encode("utf-8"), digest_size=8).hexdigest()
+
+
+def hash_placement(path: str, n_dtns: int) -> int:
+    """Map a pathname onto the DTN that owns its metadata (§III-B1)."""
+    if n_dtns <= 0:
+        raise ValueError("need at least one DTN")
+    return int(path_hash(path), 16) % n_dtns
+
+
+# ---------------------------------------------------------------------------
+# SQLite shards
+# ---------------------------------------------------------------------------
+
+
+class _SqliteShard:
+    """One SQLite database file + a lock (SQLite serializes writers anyway)."""
+
+    SCHEMA: Sequence[str] = ()
+
+    def __init__(self, db_path: str):
+        self.db_path = db_path
+        if db_path != ":memory:":
+            os.makedirs(os.path.dirname(db_path) or ".", exist_ok=True)
+        self._conn = sqlite3.connect(db_path, check_same_thread=False)
+        self._conn.execute("PRAGMA journal_mode=MEMORY")
+        self._conn.execute("PRAGMA synchronous=OFF")
+        self._lock = threading.Lock()
+        with self._lock:
+            for stmt in self.SCHEMA:
+                self._conn.execute(stmt)
+            self._conn.commit()
+
+    def execute(self, sql: str, params: Sequence = ()) -> List[tuple]:
+        with self._lock:
+            cur = self._conn.execute(sql, params)
+            rows = cur.fetchall()
+            self._conn.commit()
+            return rows
+
+    def executemany(self, sql: str, rows: Iterable[Sequence]) -> int:
+        with self._lock:
+            cur = self._conn.executemany(sql, rows)
+            self._conn.commit()
+            return cur.rowcount
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+
+class MetadataShard(_SqliteShard):
+    """File-system metadata + (replicated) namespace table — Fig. 4 left."""
+
+    SCHEMA = (
+        """CREATE TABLE IF NOT EXISTS files(
+            path TEXT PRIMARY KEY,
+            name TEXT NOT NULL,
+            parent TEXT NOT NULL,
+            size INTEGER NOT NULL DEFAULT 0,
+            owner TEXT NOT NULL DEFAULT '',
+            dc_id TEXT NOT NULL,
+            dtn_id INTEGER NOT NULL,
+            ns_id INTEGER NOT NULL DEFAULT 0,
+            sync INTEGER NOT NULL DEFAULT 0,
+            is_dir INTEGER NOT NULL DEFAULT 0,
+            ctime REAL NOT NULL,
+            mtime REAL NOT NULL,
+            path_hash TEXT NOT NULL
+        )""",
+        "CREATE INDEX IF NOT EXISTS idx_files_parent ON files(parent)",
+        "CREATE INDEX IF NOT EXISTS idx_files_ns ON files(ns_id)",
+        """CREATE TABLE IF NOT EXISTS namespaces(
+            ns_id INTEGER PRIMARY KEY,
+            name TEXT UNIQUE NOT NULL,
+            scope TEXT NOT NULL,
+            owner TEXT NOT NULL,
+            prefix TEXT NOT NULL
+        )""",
+    )
+
+
+class DiscoveryShard(_SqliteShard):
+    """Indexing metadata: attribute rows + pending-index queue — Fig. 4 right."""
+
+    SCHEMA = (
+        """CREATE TABLE IF NOT EXISTS attributes(
+            id INTEGER PRIMARY KEY AUTOINCREMENT,
+            path TEXT NOT NULL,
+            attr_name TEXT NOT NULL,
+            attr_type TEXT NOT NULL,
+            value_int INTEGER,
+            value_real REAL,
+            value_text TEXT
+        )""",
+        "CREATE INDEX IF NOT EXISTS idx_attr_name ON attributes(attr_name)",
+        "CREATE INDEX IF NOT EXISTS idx_attr_path ON attributes(path)",
+        """CREATE TABLE IF NOT EXISTS pending_index(
+            id INTEGER PRIMARY KEY AUTOINCREMENT,
+            path TEXT NOT NULL,
+            dc_id TEXT NOT NULL,
+            enqueue_time REAL NOT NULL
+        )""",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Metadata service (one per DTN, reached over RPC)
+# ---------------------------------------------------------------------------
+
+_FILE_COLS = (
+    "path",
+    "name",
+    "parent",
+    "size",
+    "owner",
+    "dc_id",
+    "dtn_id",
+    "ns_id",
+    "sync",
+    "is_dir",
+    "ctime",
+    "mtime",
+    "path_hash",
+)
+
+
+def _row_to_entry(row: tuple) -> Dict[str, Any]:
+    return dict(zip(_FILE_COLS, row))
+
+
+class MetadataService:
+    """RPC-facing facade over one DTN's metadata shard.
+
+    Method signatures use only message-codec-safe types (see rpc.pack); this
+    is the surface a gRPC .proto would describe.
+    """
+
+    def __init__(self, shard: MetadataShard, *, dtn_id: int, dc_id: str):
+        self.shard = shard
+        self.dtn_id = dtn_id
+        self.dc_id = dc_id
+
+    # -- FUSE-sequence ops (getattr, lookup, create, write/update, flush) ----
+    def getattr(self, path: str) -> Optional[Dict[str, Any]]:
+        rows = self.shard.execute(
+            f"SELECT {','.join(_FILE_COLS)} FROM files WHERE path=?", (path,)
+        )
+        return _row_to_entry(rows[0]) if rows else None
+
+    def lookup(self, path: str) -> bool:
+        rows = self.shard.execute("SELECT 1 FROM files WHERE path=?", (path,))
+        return bool(rows)
+
+    def create(
+        self,
+        path: str,
+        owner: str,
+        dc_id: str,
+        ns_id: int,
+        is_dir: bool = False,
+        sync: bool = True,
+        size: int = 0,
+    ) -> Dict[str, Any]:
+        now = time.time()
+        name = path.rstrip("/").rsplit("/", 1)[-1] or "/"
+        parent = path.rstrip("/").rsplit("/", 1)[0] or "/"
+        entry = {
+            "path": path,
+            "name": name,
+            "parent": parent,
+            "size": size,
+            "owner": owner,
+            "dc_id": dc_id,
+            "dtn_id": self.dtn_id,
+            "ns_id": ns_id,
+            "sync": 1 if sync else 0,
+            "is_dir": 1 if is_dir else 0,
+            "ctime": now,
+            "mtime": now,
+            "path_hash": path_hash(path),
+        }
+        self.shard.execute(
+            f"INSERT OR REPLACE INTO files({','.join(_FILE_COLS)}) "
+            f"VALUES({','.join('?' * len(_FILE_COLS))})",
+            tuple(entry[c] for c in _FILE_COLS),
+        )
+        return entry
+
+    def update(self, path: str, size: Optional[int] = None, sync: Optional[bool] = None) -> bool:
+        sets, params = ["mtime=?"], [time.time()]
+        if size is not None:
+            sets.append("size=?")
+            params.append(size)
+        if sync is not None:
+            sets.append("sync=?")
+            params.append(1 if sync else 0)
+        params.append(path)
+        self.shard.execute(f"UPDATE files SET {','.join(sets)} WHERE path=?", params)
+        return True
+
+    def delete(self, path: str) -> bool:
+        self.shard.execute("DELETE FROM files WHERE path=? OR path LIKE ?", (path, path + "/%"))
+        return True
+
+    # -- MEU: one batched RPC commits many entries (§III-B3) -----------------
+    def batch_upsert(self, entries: List[Dict[str, Any]]) -> int:
+        rows = []
+        now = time.time()
+        for e in entries:
+            path = e["path"]
+            name = path.rstrip("/").rsplit("/", 1)[-1] or "/"
+            parent = path.rstrip("/").rsplit("/", 1)[0] or "/"
+            rows.append(
+                (
+                    path,
+                    name,
+                    parent,
+                    int(e.get("size", 0)),
+                    e.get("owner", ""),
+                    e["dc_id"],
+                    self.dtn_id,
+                    int(e.get("ns_id", 0)),
+                    int(e.get("sync", 1)),
+                    int(e.get("is_dir", 0)),
+                    float(e.get("ctime", now)),
+                    float(e.get("mtime", now)),
+                    path_hash(path),
+                )
+            )
+        return self.shard.executemany(
+            f"INSERT OR REPLACE INTO files({','.join(_FILE_COLS)}) "
+            f"VALUES({','.join('?' * len(_FILE_COLS))})",
+            rows,
+        )
+
+    # -- listing with sync-flag + namespace-visibility semantics (§III-B1/B4)
+    def _visibility_clause(self, requester: str) -> tuple:
+        # A file is visible when its sync flag is set AND its namespace scope
+        # is global, or the requester owns it / its namespace.
+        sql = (
+            "SELECT {cols} FROM files f LEFT JOIN namespaces n ON f.ns_id = n.ns_id "
+            "WHERE f.sync=1 AND (n.scope IS NULL OR n.scope='global' "
+            "OR f.owner=? OR n.owner=?)"
+        ).format(cols=",".join("f." + c for c in _FILE_COLS))
+        return sql, (requester, requester)
+
+    def list_dir(self, parent: str, requester: str) -> List[Dict[str, Any]]:
+        sql, params = self._visibility_clause(requester)
+        sql += " AND f.parent=?"
+        rows = self.shard.execute(sql, params + (parent,))
+        return [_row_to_entry(r) for r in rows]
+
+    def list_all(self, requester: str, prefix: str = "/") -> List[Dict[str, Any]]:
+        sql, params = self._visibility_clause(requester)
+        sql += " AND (f.path=? OR f.path LIKE ?)"
+        rows = self.shard.execute(sql, params + (prefix, prefix.rstrip("/") + "/%"))
+        return [_row_to_entry(r) for r in rows]
+
+    # -- namespace table (replicated to every shard) --------------------------
+    def put_namespace(self, ns_id: int, name: str, scope: str, owner: str, prefix: str) -> bool:
+        self.shard.execute(
+            "INSERT OR REPLACE INTO namespaces(ns_id,name,scope,owner,prefix) VALUES(?,?,?,?,?)",
+            (ns_id, name, scope, owner, prefix),
+        )
+        return True
+
+    def list_namespaces(self) -> List[Dict[str, Any]]:
+        rows = self.shard.execute("SELECT ns_id,name,scope,owner,prefix FROM namespaces")
+        return [dict(zip(("ns_id", "name", "scope", "owner", "prefix"), r)) for r in rows]
+
+    # -- health/introspection -------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        (n_files,) = self.shard.execute("SELECT COUNT(*) FROM files")[0]
+        (n_ns,) = self.shard.execute("SELECT COUNT(*) FROM namespaces")[0]
+        return {"files": n_files, "namespaces": n_ns, "dtn_id": self.dtn_id}

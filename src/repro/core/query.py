@@ -1,0 +1,160 @@
+"""Query language for the Scientific Discovery Service (§III-B5).
+
+The paper's command-line utility accepts query strings with ``=``, ``>`` and
+``<`` operators (plus ``like`` for text).  We implement that surface, extended
+with ``>=``, ``<=``, ``!=`` and ``and`` conjunctions, compiled to
+parameterized SQL over the discovery-shard schema:
+
+    attributes(path, attr_name, attr_type, value_int, value_real, value_text)
+
+Examples accepted::
+
+    location = "Pacific Ocean"
+    day_or_night = 1
+    date like "2014-07-%"
+    instrument = MODIS and hour >= 12
+
+Each predicate matches rows of one attribute; conjunctions intersect the
+*file sets* (a file satisfies the query when every predicate matches at least
+one of its attribute rows — the many-to-many association the paper keeps a
+relational store for).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, List, Sequence, Tuple, Union
+
+__all__ = ["Predicate", "Query", "parse_query", "QueryError"]
+
+
+class QueryError(ValueError):
+    pass
+
+
+_OPS = ("<=", ">=", "!=", "=", "<", ">", "like")
+
+_TOKEN = re.compile(
+    r"""\s*(?:
+        (?P<quoted>"[^"]*"|'[^']*') |
+        (?P<op><=|>=|!=|=|<|>) |
+        (?P<word>[^\s<>=!]+)
+    )""",
+    re.VERBOSE,
+)
+
+
+def _tokenize(text: str) -> List[str]:
+    tokens, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN.match(text, pos)
+        if not m or m.end() == pos:
+            if text[pos:].strip():
+                raise QueryError(f"cannot tokenize query near: {text[pos:]!r}")
+            break
+        pos = m.end()
+        if m.group("quoted") is not None:
+            tokens.append(("value", m.group("quoted")[1:-1]))
+        elif m.group("op") is not None:
+            tokens.append(("op", m.group("op")))
+        else:
+            word = m.group("word")
+            if word.lower() == "and":
+                tokens.append(("and", word))
+            elif word.lower() == "like":
+                tokens.append(("op", "like"))
+            else:
+                tokens.append(("word", word))
+    return tokens
+
+
+def _coerce(raw: str) -> Tuple[str, Union[int, float, str]]:
+    """Literal → (attr_type, value), following the paper's 3 datatypes."""
+    try:
+        return "int", int(raw)
+    except ValueError:
+        pass
+    try:
+        return "float", float(raw)
+    except ValueError:
+        pass
+    return "text", raw
+
+
+@dataclass(frozen=True)
+class Predicate:
+    attr: str
+    op: str
+    value: Union[int, float, str]
+    attr_type: str
+
+    def to_sql(self) -> Tuple[str, Sequence[Any]]:
+        """SQL selecting *paths* whose attribute rows satisfy this predicate."""
+        col = {"int": "value_int", "float": "value_real", "text": "value_text"}[self.attr_type]
+        if self.op == "like":
+            if self.attr_type != "text":
+                raise QueryError("'like' only applies to text attributes")
+            cond = f"{col} LIKE ?"
+            params: Tuple[Any, ...] = (self.value,)
+        elif self.op == "!=":
+            cond = f"{col} <> ?"
+            params = (self.value,)
+        else:
+            cond = f"{col} {self.op} ?"
+            params = (self.value,)
+        # int predicates also match float-typed rows and vice versa
+        if self.attr_type in ("int", "float"):
+            other = "value_real" if col == "value_int" else "value_int"
+            op = "<>" if self.op == "!=" else ("LIKE" if self.op == "like" else self.op)
+            cond = f"({cond} OR {other} {op} ?)"
+            params = params + (self.value,)
+        sql = f"SELECT DISTINCT path FROM attributes WHERE attr_name = ? AND {cond}"
+        return sql, (self.attr,) + tuple(params)
+
+
+@dataclass(frozen=True)
+class Query:
+    predicates: Tuple[Predicate, ...]
+
+    def to_sql(self) -> Tuple[str, Sequence[Any]]:
+        """Intersection of per-predicate path sets (AND semantics)."""
+        if not self.predicates:
+            raise QueryError("empty query")
+        parts, params = [], []
+        for pred in self.predicates:
+            sql, p = pred.to_sql()
+            parts.append(sql)
+            params.extend(p)
+        return " INTERSECT ".join(parts), tuple(params)
+
+
+def parse_query(text: str) -> Query:
+    tokens = _tokenize(text)
+    preds: List[Predicate] = []
+    i = 0
+    while i < len(tokens):
+        kind, val = tokens[i]
+        if kind == "and":
+            i += 1
+            continue
+        if kind not in ("word", "value"):
+            raise QueryError(f"expected attribute name, got {val!r}")
+        attr = val
+        if i + 2 >= len(tokens) + 1 and i + 1 >= len(tokens):
+            raise QueryError(f"dangling attribute {attr!r}")
+        kind_op, op = tokens[i + 1]
+        if kind_op != "op" or op not in _OPS:
+            raise QueryError(f"expected operator after {attr!r}, got {op!r}")
+        if i + 2 >= len(tokens):
+            raise QueryError(f"missing value for {attr!r} {op}")
+        kind_v, raw = tokens[i + 2]
+        if kind_v == "value":  # quoted ⇒ always text
+            attr_type, value = "text", raw
+        else:
+            attr_type, value = _coerce(raw)
+        preds.append(Predicate(attr=attr, op=op, value=value, attr_type=attr_type))
+        i += 3
+    if not preds:
+        raise QueryError(f"no predicates in query: {text!r}")
+    return Query(tuple(preds))

@@ -1,0 +1,250 @@
+"""Message layer for SCISPACE services.
+
+The paper implements all component interaction with gRPC + Google Protocol
+Buffers (§IV-A).  This container has neither a network nor grpc installed, so
+this module provides the same *shape* of system — explicit binary message
+serialization, client/server dispatch, and per-message channel costs — as an
+in-process library.  The serialization cost is real (every request and reply
+is packed to bytes and unpacked again, exactly the overhead the paper measures
+in §IV-E "message packing and unpacking at SDS"), and the channel cost is
+injectable so benchmarks can model intra-DC vs cross-DC links.
+
+A real deployment would swap :class:`RpcClient`/:class:`RpcServer` for gRPC
+stubs; every service in :mod:`repro.core` talks only through this interface.
+"""
+
+from __future__ import annotations
+
+import io
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+__all__ = [
+    "pack",
+    "unpack",
+    "Channel",
+    "RpcServer",
+    "RpcClient",
+    "RpcError",
+    "RpcStats",
+]
+
+# ---------------------------------------------------------------------------
+# Binary codec (protobuf stand-in).
+#
+# Wire format: 1 type byte, then a type-specific payload.  Containers are
+# length-prefixed.  This is a genuine serialization pass — benchmarks that
+# measure "message packing overhead" measure this code.
+# ---------------------------------------------------------------------------
+
+_T_NONE = b"N"
+_T_TRUE = b"T"
+_T_FALSE = b"F"
+_T_INT = b"I"
+_T_FLOAT = b"D"
+_T_STR = b"S"
+_T_BYTES = b"B"
+_T_LIST = b"L"
+_T_DICT = b"M"
+
+
+def _pack_into(buf: io.BytesIO, obj: Any) -> None:
+    if obj is None:
+        buf.write(_T_NONE)
+    elif obj is True:
+        buf.write(_T_TRUE)
+    elif obj is False:
+        buf.write(_T_FALSE)
+    elif isinstance(obj, int):
+        buf.write(_T_INT)
+        buf.write(struct.pack("<q", obj))
+    elif isinstance(obj, float):
+        buf.write(_T_FLOAT)
+        buf.write(struct.pack("<d", obj))
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        buf.write(_T_STR)
+        buf.write(struct.pack("<I", len(raw)))
+        buf.write(raw)
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        raw = bytes(obj)
+        buf.write(_T_BYTES)
+        buf.write(struct.pack("<I", len(raw)))
+        buf.write(raw)
+    elif isinstance(obj, (list, tuple)):
+        buf.write(_T_LIST)
+        buf.write(struct.pack("<I", len(obj)))
+        for item in obj:
+            _pack_into(buf, item)
+    elif isinstance(obj, dict):
+        buf.write(_T_DICT)
+        buf.write(struct.pack("<I", len(obj)))
+        for key, value in obj.items():
+            if not isinstance(key, str):
+                raise TypeError(f"message dict keys must be str, got {type(key)!r}")
+            raw = key.encode("utf-8")
+            buf.write(struct.pack("<I", len(raw)))
+            buf.write(raw)
+            _pack_into(buf, value)
+    else:
+        raise TypeError(f"unsupported message field type: {type(obj)!r}")
+
+
+def pack(obj: Any) -> bytes:
+    """Serialize a message object (nested dict/list of primitives) to bytes."""
+    buf = io.BytesIO()
+    _pack_into(buf, obj)
+    return buf.getvalue()
+
+
+def _unpack_from(buf: io.BytesIO) -> Any:
+    tag = buf.read(1)
+    if tag == _T_NONE:
+        return None
+    if tag == _T_TRUE:
+        return True
+    if tag == _T_FALSE:
+        return False
+    if tag == _T_INT:
+        return struct.unpack("<q", buf.read(8))[0]
+    if tag == _T_FLOAT:
+        return struct.unpack("<d", buf.read(8))[0]
+    if tag == _T_STR:
+        (n,) = struct.unpack("<I", buf.read(4))
+        return buf.read(n).decode("utf-8")
+    if tag == _T_BYTES:
+        (n,) = struct.unpack("<I", buf.read(4))
+        return buf.read(n)
+    if tag == _T_LIST:
+        (n,) = struct.unpack("<I", buf.read(4))
+        return [_unpack_from(buf) for _ in range(n)]
+    if tag == _T_DICT:
+        (n,) = struct.unpack("<I", buf.read(4))
+        out = {}
+        for _ in range(n):
+            (k,) = struct.unpack("<I", buf.read(4))
+            key = buf.read(k).decode("utf-8")
+            out[key] = _unpack_from(buf)
+        return out
+    raise ValueError(f"corrupt message: unknown tag {tag!r}")
+
+
+def unpack(data: bytes) -> Any:
+    """Inverse of :func:`pack`."""
+    return _unpack_from(io.BytesIO(data))
+
+
+# ---------------------------------------------------------------------------
+# Channels: model the link a message crosses.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Channel:
+    """A (simulated) network link with latency and bandwidth.
+
+    ``latency_s`` is the one-way per-message latency; ``gbps`` the link
+    bandwidth in gigabits/s.  Zero latency + infinite bandwidth (the default)
+    makes transmission free while the serialization cost stays real.
+    """
+
+    name: str = "local"
+    latency_s: float = 0.0
+    gbps: float = float("inf")
+
+    def transmit(self, payload_len: int) -> None:
+        delay = self.latency_s
+        if self.gbps != float("inf") and self.gbps > 0:
+            delay += (payload_len * 8) / (self.gbps * 1e9)
+        if delay > 0:
+            time.sleep(delay)
+
+
+#: A free channel for purely in-process wiring.
+LOOPBACK = Channel(name="loopback")
+
+
+# ---------------------------------------------------------------------------
+# Client / server
+# ---------------------------------------------------------------------------
+
+
+class RpcError(RuntimeError):
+    """A remote call failed; carries the remote exception message."""
+
+
+@dataclass
+class RpcStats:
+    """Per-client running counters (used by benchmarks + EXPERIMENTS.md)."""
+
+    calls: int = 0
+    bytes_sent: int = 0
+    bytes_received: int = 0
+    pack_seconds: float = 0.0
+    wire_seconds: float = 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "calls": self.calls,
+            "bytes_sent": self.bytes_sent,
+            "bytes_received": self.bytes_received,
+            "pack_seconds": self.pack_seconds,
+            "wire_seconds": self.wire_seconds,
+        }
+
+
+class RpcServer:
+    """Dispatches packed requests onto a service object's public methods."""
+
+    def __init__(self, service: Any, name: str = "service"):
+        self._service = service
+        self.name = name
+        self._lock = threading.Lock()
+
+    def handle(self, request: bytes) -> bytes:
+        req = unpack(request)
+        method = req["method"]
+        kwargs = req.get("kwargs") or {}
+        if method.startswith("_"):
+            return pack({"ok": False, "error": f"no such method: {method}"})
+        fn: Optional[Callable] = getattr(self._service, method, None)
+        if fn is None or not callable(fn):
+            return pack({"ok": False, "error": f"no such method: {method}"})
+        try:
+            result = fn(**kwargs)
+            return pack({"ok": True, "result": result})
+        except Exception as exc:  # noqa: BLE001 - faithfully forwarded to client
+            return pack({"ok": False, "error": f"{type(exc).__name__}: {exc}"})
+
+
+class RpcClient:
+    """Client stub: packs the call, crosses the channel both ways, unpacks."""
+
+    def __init__(self, server: RpcServer, channel: Channel = LOOPBACK):
+        self._server = server
+        self.channel = channel
+        self.stats = RpcStats()
+
+    def call(self, method: str, **kwargs: Any) -> Any:
+        t0 = time.perf_counter()
+        request = pack({"method": method, "kwargs": kwargs})
+        t1 = time.perf_counter()
+        self.channel.transmit(len(request))
+        response = self._server.handle(request)
+        self.channel.transmit(len(response))
+        t2 = time.perf_counter()
+        resp = unpack(response)
+        t3 = time.perf_counter()
+
+        self.stats.calls += 1
+        self.stats.bytes_sent += len(request)
+        self.stats.bytes_received += len(response)
+        self.stats.pack_seconds += (t1 - t0) + (t3 - t2)
+        self.stats.wire_seconds += t2 - t1
+
+        if not resp.get("ok"):
+            raise RpcError(resp.get("error", "unknown remote error"))
+        return resp.get("result")

@@ -1,0 +1,294 @@
+"""The Scientific Collaboration Workspace client — ``scifs`` (§III-B1, Fig. 3).
+
+One :class:`Workspace` instance is one collaborator's mount of the unified
+namespace.  It provides POSIX-like operations (create/write/read/ls/stat/
+mkdir) over every data center in the collaboration:
+
+- **placement**: an incoming write is assigned a DTN by hashing the file
+  pathname; the file's data lands in that DTN's data-center PFS and its
+  metadata in that DTN's metadata shard;
+- **FUSE five-op sequence**: the paper measures that FUSE "invokes five
+  operations serially: getattr, lookup, create, write and flush" (§IV-C).
+  The workspace write path issues the same sequence as explicit metadata
+  RPCs, so the sync-workspace vs native-access gap in our benchmarks has the
+  same structure as the paper's, not a hard-coded constant;
+- **ls** fans out to all DTNs in parallel and shows only entries with
+  ``sync=true`` that are visible under the requester's namespaces;
+- **SDS coupling**: scidata writes trigger attribute extraction according to
+  the configured :class:`~repro.core.discovery.ExtractionMode`.
+
+Native access (SCISPACE-LW) is the *absence* of this client: collaborators
+write straight into their local DC's backend via :class:`NativeSession` and
+later export metadata with :class:`~repro.core.meu.MEU`.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .backends import StorageBackend, SYNC_XATTR
+from .cluster import Collaboration, DataCenter, DTN
+from .discovery import ExtractionMode
+from .rpc import Channel, RpcClient
+from .scidata import (
+    read_dataset,
+    read_header,
+    serialize_scidata,
+    write_scidata as _write_scidata_backend,
+)
+
+__all__ = ["Workspace", "NativeSession"]
+
+
+def _norm(path: str) -> str:
+    path = "/" + path.strip("/")
+    while "//" in path:
+        path = path.replace("//", "/")
+    return path
+
+
+class Workspace:
+    """A collaborator's mounted view of the collaboration (``/mnt/scifs``)."""
+
+    def __init__(
+        self,
+        collab: Collaboration,
+        collaborator: str,
+        home_dc: str,
+        *,
+        extraction_mode: str = ExtractionMode.INLINE_ASYNC,
+        attr_filter: Optional[List[str]] = None,
+    ):
+        if extraction_mode not in ExtractionMode.ALL:
+            raise ValueError(f"unknown extraction mode {extraction_mode!r}")
+        self.collab = collab
+        self.collaborator = collaborator
+        self.home_dc = home_dc
+        self.extraction_mode = extraction_mode
+        self.attr_filter = attr_filter
+        # One metadata + one discovery client per DTN, over the policy channel.
+        self._meta: List[RpcClient] = []
+        self._sds: List[RpcClient] = []
+        for dtn in collab.dtns:
+            ch = collab.channel_policy(home_dc, dtn.dc_id)
+            self._meta.append(RpcClient(dtn.metadata_server, ch))
+            self._sds.append(RpcClient(dtn.discovery_server, ch))
+        self._data_channels: Dict[str, Channel] = {
+            dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
+        }
+        self._pool = ThreadPoolExecutor(max_workers=max(4, len(collab.dtns)))
+
+    # -- internals ---------------------------------------------------------------
+    def _owner(self, path: str) -> int:
+        from .metadata import hash_placement
+
+        return hash_placement(path, len(self.collab.dtns))
+
+    def _dtn(self, path: str) -> DTN:
+        return self.collab.dtns[self._owner(path)]
+
+    def _meta_client(self, path: str) -> RpcClient:
+        return self._meta[self._owner(path)]
+
+    def _data_io(self, dc_id: str, nbytes: int) -> None:
+        """Cross the data-plane link for a remote-DC read/write."""
+        if dc_id != self.home_dc:
+            self._data_channels[dc_id].transmit(nbytes)
+
+    def _ns_id(self, path: str) -> int:
+        return self.collab.namespaces.resolve(path).ns_id
+
+    # -- POSIX-like surface ---------------------------------------------------
+    def write(self, path: str, data: bytes) -> int:
+        """The five-op FUSE sequence + data-plane write + SDS coupling."""
+        path = _norm(path)
+        dtn = self._dtn(path)
+        md = self._meta_client(path)
+        parent = path.rsplit("/", 1)[0] or "/"
+        md.call("getattr", path=parent)                     # 1 getattr
+        md.call("lookup", path=path)                        # 2 lookup
+        md.call(                                            # 3 create
+            "create",
+            path=path,
+            owner=self.collaborator,
+            dc_id=dtn.dc_id,
+            ns_id=self._ns_id(path),
+            is_dir=False,
+            sync=True,
+        )
+        self._data_io(dtn.dc_id, len(data))                 # 4 write (data plane)
+        dtn.backend.write(path, data, owner=self.collaborator)
+        md.call("update", path=path, size=len(data), sync=True)  # 5 flush
+        dtn.backend.set_xattr(path, SYNC_XATTR, "true")
+        self._index_hook(path, dtn, len(data))
+        return len(data)
+
+    def _index_hook(self, path: str, dtn: DTN, size: int) -> None:
+        sds = self._sds[dtn.dtn_id]
+        if self.extraction_mode == ExtractionMode.INLINE_SYNC:
+            # write completes only after extraction+indexing (§III-B5)
+            sds.call("extract_and_index", path=path, attr_filter=self.attr_filter, stat_size=size)
+        elif self.extraction_mode == ExtractionMode.INLINE_ASYNC:
+            # a single registration message; indexing happens later
+            sds.call("enqueue_index", path=path, dc_id=dtn.dc_id)
+        # NONE / LW_OFFLINE: nothing in the write path
+
+    def read(self, path: str) -> bytes:
+        path = _norm(path)
+        md = self._meta_client(path)
+        entry = md.call("getattr", path=path)
+        if entry is None:
+            raise FileNotFoundError(path)
+        dc = self.collab.dc(entry["dc_id"])
+        data = dc.backend.read(path)
+        self._data_io(entry["dc_id"], len(data))
+        return data
+
+    def stat(self, path: str) -> Optional[Dict[str, Any]]:
+        return self._meta_client(_norm(path)).call("getattr", path=_norm(path))
+
+    def exists(self, path: str) -> bool:
+        return bool(self._meta_client(_norm(path)).call("lookup", path=_norm(path)))
+
+    def mkdir(self, path: str) -> None:
+        path = _norm(path)
+        dtn = self._dtn(path)
+        md = self._meta_client(path)
+        md.call(
+            "create",
+            path=path,
+            owner=self.collaborator,
+            dc_id=dtn.dc_id,
+            ns_id=self._ns_id(path),
+            is_dir=True,
+            sync=True,
+        )
+        dtn.backend.mkdir(path, owner=self.collaborator)
+
+    def ls(self, path: str = "/") -> List[Dict[str, Any]]:
+        """Merge listings from every DTN in parallel (§III-B1)."""
+        path = _norm(path)
+        futures = [
+            self._pool.submit(c.call, "list_dir", parent=path, requester=self.collaborator)
+            for c in self._meta
+        ]
+        out: List[Dict[str, Any]] = []
+        for f in futures:
+            out.extend(f.result())
+        return sorted(out, key=lambda e: e["path"])
+
+    def find(self, prefix: str = "/") -> List[Dict[str, Any]]:
+        """Recursive listing (global view of all shared datasets)."""
+        prefix = _norm(prefix)
+        futures = [
+            self._pool.submit(c.call, "list_all", requester=self.collaborator, prefix=prefix)
+            for c in self._meta
+        ]
+        out: List[Dict[str, Any]] = []
+        for f in futures:
+            out.extend(f.result())
+        return sorted(out, key=lambda e: e["path"])
+
+    def delete(self, path: str) -> None:
+        """Owner-only removal (the paper defers remote removal; §III-B1)."""
+        path = _norm(path)
+        entry = self.stat(path)
+        if entry is None:
+            raise FileNotFoundError(path)
+        if entry["owner"] != self.collaborator:
+            raise PermissionError(f"{self.collaborator} does not own {path}")
+        self._meta_client(path).call("delete", path=path)
+        dc = self.collab.dc(entry["dc_id"])
+        if dc.backend.exists(path):
+            dc.backend.delete(path)
+
+    # -- scientific data + discovery ----------------------------------------------
+    def write_scidata(self, path: str, arrays: Dict[str, np.ndarray], attrs: Dict[str, Any]) -> int:
+        """Write a self-describing dataset through the workspace."""
+        return self.write(path, serialize_scidata(arrays, attrs))
+
+    def read_attrs(self, path: str) -> Dict[str, Any]:
+        path = _norm(path)
+        entry = self.stat(path)
+        if entry is None:
+            raise FileNotFoundError(path)
+        dc = self.collab.dc(entry["dc_id"])
+        return read_header(dc.backend, path).attrs
+
+    def read_dataset(self, path: str, name: str) -> np.ndarray:
+        path = _norm(path)
+        entry = self.stat(path)
+        if entry is None:
+            raise FileNotFoundError(path)
+        dc = self.collab.dc(entry["dc_id"])
+        arr = read_dataset(dc.backend, path, name)
+        self._data_io(entry["dc_id"], arr.nbytes)
+        return arr
+
+    def tag(self, path: str, name: str, value: Any) -> None:
+        """Manual attribute tagging (§III-B5)."""
+        path = _norm(path)
+        dtn = self._dtn(path)
+        self._sds[dtn.dtn_id].call("tag", path=path, name=name, value=value)
+
+    def search(self, query: str) -> List[Dict[str, Any]]:
+        """Attribute query, fanned out to every discovery shard (§III-B5)."""
+        futures = [self._pool.submit(c.call, "query_with_values", text=query) for c in self._sds]
+        out: List[Dict[str, Any]] = []
+        for f in futures:
+            out.extend(f.result())
+        return sorted(out, key=lambda e: e["path"])
+
+    def search_paths(self, query: str) -> List[str]:
+        return [e["path"] for e in self.search(query)]
+
+    # -- accounting -----------------------------------------------------------------
+    def rpc_stats(self) -> Dict[str, float]:
+        agg: Dict[str, float] = {}
+        for c in self._meta + self._sds:
+            for k, v in c.stats.snapshot().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+
+class NativeSession:
+    """SCISPACE-LW: direct access to the local DC namespace (§III-B3).
+
+    No FUSE layer, no metadata RPCs — the paper's native-data-access path.
+    Files written here are invisible in the workspace until
+    :class:`~repro.core.meu.MEU` exports their metadata.
+    """
+
+    def __init__(self, dc: DataCenter, collaborator: str):
+        self.dc = dc
+        self.backend: StorageBackend = dc.backend
+        self.collaborator = collaborator
+
+    def write(self, path: str, data: bytes) -> int:
+        return self.backend.write(_norm(path), data, owner=self.collaborator)
+
+    def create(self, path: str) -> None:
+        self.backend.create(_norm(path), owner=self.collaborator)
+
+    def read(self, path: str) -> bytes:
+        return self.backend.read(_norm(path))
+
+    def mkdir(self, path: str) -> None:
+        self.backend.mkdir(_norm(path), owner=self.collaborator)
+
+    def write_scidata(self, path: str, arrays: Dict[str, np.ndarray], attrs: Dict[str, Any]) -> int:
+        return _write_scidata_backend(
+            self.backend, _norm(path), arrays, attrs, owner=self.collaborator
+        )
+
+    def offline_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
+        """LW-Offline extraction on the local DC's DTNs (§III-B5)."""
+        return self.dc.offline_index([_norm(p) for p in paths], attr_filter)

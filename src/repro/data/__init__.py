@@ -1,0 +1,5 @@
+"""Data substrate: deterministic sharded synthetic pipeline + scidata reader."""
+
+from .pipeline import ShardedPipeline, SyntheticLM, WorkStealingBalancer
+
+__all__ = ["ShardedPipeline", "SyntheticLM", "WorkStealingBalancer"]

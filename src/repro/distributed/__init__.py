@@ -1,0 +1,22 @@
+"""Distribution substrate: sharding rules, collectives, pipeline parallelism."""
+
+from .collectives import hierarchical_grad_mean, pod_mean
+from .sharding import (
+    batch_shardings,
+    batch_spec,
+    cache_shardings,
+    data_axes,
+    param_shardings,
+    param_spec_for_path,
+)
+
+__all__ = [
+    "hierarchical_grad_mean",
+    "pod_mean",
+    "batch_shardings",
+    "batch_spec",
+    "cache_shardings",
+    "data_axes",
+    "param_shardings",
+    "param_spec_for_path",
+]

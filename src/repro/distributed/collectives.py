@@ -1,0 +1,60 @@
+"""Collective helpers: hierarchical reductions for the pod (DCN) axis.
+
+The SCISPACE principle applied to gradients: **keep bulk traffic on the fast
+local fabric, move the minimum across the slow link**.  On the production
+mesh the ``data`` axis is intra-pod ICI and ``pod`` is the DCN; a flat
+all-reduce over (pod×data) pushes full f32 gradients over the DCN, while the
+hierarchical schedule lets GSPMD reduce within the pod (auto axes) and sends
+only int8-quantized gradients across pods.
+
+These helpers run *inside* a ``shard_map`` that is manual over ``pod`` and
+auto over data/model (``axis_names={'pod'}``, check_vma=True) — see
+:func:`repro.train.step.build_train_step` with ``cross_pod='manual'`` or
+``'compressed'``.  Error-feedback state is stored with a leading pod
+dimension ([n_pods, ...], in/out specs ``P('pod')``) so each pod carries its
+own residual.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import ef_quantized_psum
+
+__all__ = ["hierarchical_grad_mean", "pod_mean"]
+
+
+def pod_mean(tree, pod_axis: str = "pod"):
+    """Plain f32 mean over the pod axis (manual collective)."""
+    return jax.tree.map(lambda g: jax.lax.pmean(g, pod_axis), tree)
+
+
+def hierarchical_grad_mean(
+    grads,
+    ef: Optional[Any] = None,
+    *,
+    pod_axis: str = "pod",
+    compress: bool = False,
+) -> Tuple[Any, Optional[Any]]:
+    """Cross-pod gradient mean; int8 + error feedback when ``compress``.
+
+    ``ef`` leaves carry a leading pod dim of size 1 inside the manual body
+    (the outer array is [n_pods, ...] sharded P('pod')).  Returns
+    (mean grads, new ef).
+    """
+    if not compress:
+        return pod_mean(grads, pod_axis), ef
+
+    assert ef is not None, "compressed mode needs error-feedback state"
+
+    def one(g, e):
+        m, ne = ef_quantized_psum(g, e[0], pod_axis)
+        return m.astype(g.dtype), ne[None]
+
+    pairs = jax.tree.map(one, grads, ef)
+    out_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    out_e = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return out_g, out_e

@@ -1,0 +1,114 @@
+"""Chunked Mamba-1 selective scan for TPU (``pl.pallas_call`` + BlockSpecs).
+
+TPU adaptation (DESIGN.md §6): the CUDA kernel assigns one thread per channel
+and scans time sequentially in registers.  On TPU the equivalent is a grid
+over ``(batch, d_inner blocks, time chunks)`` with the per-channel state
+h ∈ ℝ^{bd×ds} held in VMEM scratch; inside a chunk, a ``fori_loop`` advances
+time with fully-vectorized [bd, ds] elementwise updates on the VPU while the
+chunk's inputs sit in VMEM.  The diagonal-A structure of Mamba-1 makes the
+update elementwise (no MXU work is lost by not using it — there is no matmul
+in the recurrence), and ``y_t = C_t · h_t`` is a ds-reduction fused into the
+same loop.
+
+decay/drive (``exp(Δ·A)``, ``Δ·u·B``) are computed *inside* the kernel from
+the [bd]- and [ds]-shaped chunk inputs rather than materialized at
+[B, S, di, ds] in HBM — an 8–16× traffic cut versus the naive lowering, which
+is exactly what makes the attention-free archs memory-bound rather than
+HBM-traffic-pathological on long contexts.
+
+VMEM per step: chunk·(2·bd + 2·ds) input floats + bd·ds state + chunk·bd out
+(chunk=128, bd=256, ds=16 → ~0.4 MB).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_pallas"]
+
+
+def _scan_kernel(
+    u_ref,   # [1, cs, bd]
+    d_ref,   # [1, cs, bd]   delta (softplus'd)
+    A_ref,   # [bd, ds]
+    b_ref,   # [1, cs, ds]
+    c_ref,   # [1, cs, ds]
+    y_ref,   # [1, cs, bd]
+    h_ref,   # VMEM [bd, ds] running state
+    *,
+    cs: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    u = u_ref[0].astype(jnp.float32)     # [cs, bd]
+    dt = d_ref[0].astype(jnp.float32)    # [cs, bd]
+    A = A_ref[...].astype(jnp.float32)   # [bd, ds]
+    Bm = b_ref[0].astype(jnp.float32)    # [cs, ds]
+    Cm = c_ref[0].astype(jnp.float32)    # [cs, ds]
+
+    def step(t, carry):
+        h, ys = carry
+        decay = jnp.exp(dt[t][:, None] * A)                  # [bd, ds]
+        drive = (dt[t] * u[t])[:, None] * Bm[t][None, :]     # [bd, ds]
+        h = decay * h + drive
+        y = jnp.sum(h * Cm[t][None, :], axis=-1)             # [bd]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, axis=0)
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((cs, u.shape[1]), jnp.float32)
+    h_fin, ys = jax.lax.fori_loop(0, cs, step, (h0, ys0))
+    h_ref[...] = h_fin
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan_pallas(
+    u: jax.Array,      # [B, S, di]
+    delta: jax.Array,  # [B, S, di]
+    A: jax.Array,      # [di, ds]
+    Bmat: jax.Array,   # [B, S, ds]
+    Cmat: jax.Array,   # [B, S, ds]
+    *,
+    chunk: int = 128,
+    block_d: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas selective scan; matches :func:`repro.kernels.ref.mamba_scan_ref`
+    (zero initial state).  Returns y [B, S, di]."""
+    B, S, di = u.shape
+    ds = A.shape[1]
+    cs = min(chunk, S)
+    bd = min(block_d, di)
+    assert S % cs == 0 and di % bd == 0, (S, cs, di, bd)
+    nc = S // cs
+    nd = di // bd
+
+    kernel = functools.partial(_scan_kernel, cs=cs)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, cs, bd), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, cs, bd), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((bd, ds), lambda b, idd, ic: (idd, 0)),
+            pl.BlockSpec((1, cs, ds), lambda b, idd, ic: (b, ic, 0)),
+            pl.BlockSpec((1, cs, ds), lambda b, idd, ic: (b, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cs, bd), lambda b, idd, ic: (b, ic, idd)),
+        out_shape=jax.ShapeDtypeStruct((B, S, di), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, A, Bmat, Cmat)
+    return y

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *naive* formulations — materialized score matrices, plain
+sequential recurrences — kept deliberately simple so they are obviously
+correct.  Kernel tests sweep shapes/dtypes and ``assert_allclose`` the Pallas
+outputs (interpret mode on CPU) against these; the chunked pure-jnp model
+paths in :mod:`repro.models` are validated against the same oracles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "wkv6_ref", "mamba_scan_ref"]
+
+_BIG_NEG = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, T, Kv, hd]
+    v: jax.Array,  # [B, T, Kv, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Full-softmax attention with an explicit [S, T] score matrix."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, S, Kv, G, hd).astype(jnp.float32)
+    kh = k.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qh, kh) * scale
+    if logit_softcap and logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    ok = jnp.ones((S, T), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(ok[None, None, None], s, _BIG_NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def wkv6_ref(
+    r: jax.Array,  # [B, S, H, C]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # [B, S, H, C] decay in (0, 1)
+    u: jax.Array,  # [H, C] current-token bonus
+    *,
+    s0: Optional[jax.Array] = None,  # [B, H, C, C]
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential RWKV-6 recurrence, one token at a time.
+
+        out_t = r_t · (S_{t-1} + (u ∘ k_t) ⊗ v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+    Returns (out [B,S,H,C], final state [B,H,C,C]).
+    """
+    B, S, H, C = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    state = jnp.zeros((B, H, C, C), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B, H, C] each
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,C,C]
+        s_eff = s + uf[None, :, :, None] * kv
+        out = jnp.einsum("bhi,bhij->bhj", rt, s_eff)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    state, outs = jax.lax.scan(
+        step,
+        state,
+        (
+            jnp.moveaxis(rf, 1, 0),
+            jnp.moveaxis(kf, 1, 0),
+            jnp.moveaxis(vf, 1, 0),
+            jnp.moveaxis(wf, 1, 0),
+        ),
+    )
+    out = jnp.moveaxis(outs, 0, 1)  # [B, S, H, C]
+    return out.astype(r.dtype), state
+
+
+def mamba_scan_ref(
+    u: jax.Array,      # [B, S, di]
+    delta: jax.Array,  # [B, S, di]  (already softplus'd)
+    A: jax.Array,      # [di, ds]    (negative)
+    Bmat: jax.Array,   # [B, S, ds]
+    Cmat: jax.Array,   # [B, S, ds]
+    *,
+    h0: Optional[jax.Array] = None,  # [B, di, ds]
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential selective scan:
+
+        h_t = exp(Δ_t A) ∘ h_{t-1} + (Δ_t u_t) B_t ;  y_t = C_t · h_t
+
+    Returns (y [B,S,di], h_final [B,di,ds]).
+    """
+    B, S, di = u.shape
+    ds = A.shape[1]
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+    h = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        ut, dt, bt, ct = inp  # [B,di], [B,di], [B,ds], [B,ds]
+        decay = jnp.exp(dt[..., None] * Af[None])           # [B,di,ds]
+        drive = (dt * ut)[..., None] * bt[:, None, :]       # [B,di,ds]
+        h_new = decay * h + drive
+        y = jnp.einsum("bdn,bn->bd", h_new, ct)
+        return h_new, y
+
+    h, ys = jax.lax.scan(
+        step,
+        h,
+        (
+            jnp.moveaxis(uf, 1, 0),
+            jnp.moveaxis(df, 1, 0),
+            jnp.moveaxis(Bf, 1, 0),
+            jnp.moveaxis(Cf, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1)  # [B, S, di]
+    return y.astype(u.dtype), h

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs."""
+
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

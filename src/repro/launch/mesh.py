@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the plain 1-device CPU.
+
+Mesh shapes (assignment spec):
+- single-pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+- multi-pod:   (pod=2, data=16, model=16)     = 512 chips (2 pods over DCN)
+
+The ``pod`` axis is the slow (DCN) axis — collectives on it are what the
+SCISPACE-style hierarchical schedules minimize.  Axis order is
+pod → data → model so the fastest-varying mesh dim (model/TP) maps to
+ICI-adjacent devices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "DEFAULT_SINGLE_POD", "DEFAULT_MULTI_POD"]
+
+DEFAULT_SINGLE_POD: Tuple[int, ...] = (16, 16)
+DEFAULT_MULTI_POD: Tuple[int, ...] = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
+    """Arbitrary mesh (tests use tiny shapes like (2, 2))."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,5 @@
+"""Model substrate: all assigned architectures as composable pure-JAX modules."""
+
+from .model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,200 @@
+"""Primitive layers shared by every architecture (pure-functional JAX).
+
+Conventions:
+- params are nested dicts of jnp arrays; ``init_*`` builds them, ``apply_*``
+  (or bare functions) consume them;
+- weights are stored in ``param_dtype`` and cast to the compute ``dtype`` at
+  use (MaxText-style mixed precision: fp32 master weights, bf16 compute);
+- leaf names are stable — the sharding rules in
+  :mod:`repro.distributed.sharding` match on them.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_dense",
+    "dense",
+    "init_norm",
+    "norm",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "rope_freqs",
+    "apply_rope",
+    "init_mlp",
+    "mlp",
+    "softcap",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def init_dense(
+    key: jax.Array,
+    in_dim: int,
+    out_shape: Tuple[int, ...],
+    *,
+    bias: bool = False,
+    param_dtype: jnp.dtype = jnp.float32,
+    scale: Optional[float] = None,
+) -> Params:
+    fan_in = in_dim
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.normal(key, (in_dim, *out_shape), dtype=jnp.float32) * std
+    p: Params = {"w": w.astype(param_dtype)}
+    if bias:
+        p["b"] = jnp.zeros(out_shape, dtype=param_dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array, *, dtype: jnp.dtype) -> jax.Array:
+    """x: [..., in] @ w: [in, *out] -> [..., *out]."""
+    w = p["w"].astype(dtype)
+    out = jnp.tensordot(x.astype(dtype), w, axes=((-1,), (0,)))
+    if "b" in p:
+        out = out + p["b"].astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, dim: int, *, param_dtype: jnp.dtype = jnp.float32) -> Params:
+    p: Params = {"scale": jnp.ones((dim,), dtype=param_dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=param_dtype)
+    return p
+
+
+def norm(p: Params, x: jax.Array, *, kind: str, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm / LayerNorm computed in fp32, returned in x.dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = (x32 - mean) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = out + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm kind {kind!r}")
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(
+    key: jax.Array, vocab: int, dim: int, *, param_dtype: jnp.dtype = jnp.float32
+) -> Params:
+    # GPT-style 0.02 init keeps initial logits O(1) (loss ≈ ln V at step 0)
+    table = jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02
+    return {"table": table.astype(param_dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, *, dtype: jnp.dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array, *, dtype: jnp.dtype) -> jax.Array:
+    """Project activations back to vocab logits (tied or untied head)."""
+    table = p["table"].astype(dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(dtype), table)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full or partial-fraction rotary)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    if rot_dim == 0:
+        return jnp.zeros((0,), dtype=jnp.float32)
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (theta ** exponent)  # [rot_dim // 2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions)."""
+    rot = freqs.shape[0] * 2
+    if rot == 0:
+        return x
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, rot/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: swiglu (gated), gelu, squared-relu (Nemotron)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    *,
+    activation: str,
+    param_dtype: jnp.dtype = jnp.float32,
+) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {}
+    if activation == "swiglu":
+        p["wi_gate"] = init_dense(k1, d_model, (d_ff,), param_dtype=param_dtype)
+        p["wi_up"] = init_dense(k2, d_model, (d_ff,), param_dtype=param_dtype)
+    else:
+        p["wi_up"] = init_dense(k2, d_model, (d_ff,), param_dtype=param_dtype)
+    p["wo"] = init_dense(k3, d_ff, (d_model,), param_dtype=param_dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, *, activation: str, dtype: jnp.dtype) -> jax.Array:
+    if activation == "swiglu":
+        gate = dense(p["wi_gate"], x, dtype=dtype)
+        up = dense(p["wi_up"], x, dtype=dtype)
+        h = jax.nn.silu(gate) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(dense(p["wi_up"], x, dtype=dtype), approximate=True)
+    elif activation == "relu2":  # Nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(dense(p["wi_up"], x, dtype=dtype)))
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return dense(p["wo"], h, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap); no-op when cap == 0."""
+    if cap and cap > 0.0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x

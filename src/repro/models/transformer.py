@@ -1,0 +1,497 @@
+"""Decoder-only LM over heterogeneous layer patterns (all non-encdec archs).
+
+The stack is ``cfg.n_units`` repeats of ``cfg.pattern`` (a tuple of
+LayerSpecs).  Parameters for each pattern position are stacked across units
+so the whole depth compiles as ONE ``lax.scan`` over units — the HLO is
+unit-sized regardless of depth (Jamba's 8-layer unit, Gemma2's 2-layer
+local/global unit, plain archs' 1-layer unit).  Activation rematerialization
+wraps the scanned unit body (``cfg.remat``).
+
+Three entry points per model: ``train_loss`` (causal LM loss, sequence-
+chunked so [B,S,V] logits never materialize), ``prefill`` (forward + cache
+build), ``decode_step`` (one token against caches).  Caches are stacked per
+pattern position, mirroring the parameter layout, so decode also scans.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_layer,
+    decode_attention_layer,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import (
+    Params,
+    dense,
+    embed,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    mlp,
+    norm,
+    softcap,
+    unembed,
+)
+from .mamba import init_mamba, init_mamba_cache, mamba_decode_step, mamba_layer
+from .moe import init_moe, moe_layer
+from .rwkv6 import (
+    init_rwkv_cache,
+    init_rwkv_cmix,
+    init_rwkv_tmix,
+    rwkv_cmix,
+    rwkv_tmix,
+)
+
+__all__ = [
+    "init_lm",
+    "lm_hidden",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "init_decode_cache",
+    "count_params",
+    "count_active_params",
+]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg, spec) -> Params:
+    pdt = _pdtype(cfg)
+    keys = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, param_dtype=pdt)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = init_attention(keys[0], cfg, param_dtype=pdt)
+    elif spec.mixer == "mamba":
+        p["mixer"] = init_mamba(keys[0], cfg, param_dtype=pdt)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = init_rwkv_tmix(keys[0], cfg, param_dtype=pdt)
+    p["norm2"] = init_norm(cfg.norm, cfg.d_model, param_dtype=pdt)
+    if spec.ffn == "dense":
+        p["ffn"] = init_mlp(keys[1], cfg.d_model, cfg.d_ff, activation=cfg.activation, param_dtype=pdt)
+    elif spec.ffn == "moe":
+        p["ffn"] = init_moe(keys[1], cfg, param_dtype=pdt)
+    elif spec.ffn == "rwkv_cmix":
+        p["ffn"] = init_rwkv_cmix(keys[1], cfg, param_dtype=pdt)
+    if cfg.post_block_norm:
+        p["norm1_post"] = init_norm(cfg.norm, cfg.d_model, param_dtype=pdt)
+        p["norm2_post"] = init_norm(cfg.norm, cfg.d_model, param_dtype=pdt)
+    return p
+
+
+def init_lm(key, cfg) -> Params:
+    pdt = _pdtype(cfg)
+    k_embed, k_units, k_head, k_front = jax.random.split(key, 4)
+    params: Params = {"embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, param_dtype=pdt)}
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, param_dtype=pdt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.vocab_size, cfg.d_model, param_dtype=pdt)
+    if cfg.frontend == "vision":
+        params["frontend_proj"] = init_dense(k_front, cfg.frontend_dim, (cfg.d_model,), param_dtype=pdt)
+
+    # stacked unit params: vmap the per-layer init over unit keys
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    units: Params = {}
+    for i, spec in enumerate(cfg.pattern):
+        pos_keys = jax.vmap(lambda k, i=i: jax.random.fold_in(k, i))(unit_keys)
+        units[f"pos{i}"] = jax.vmap(lambda k, s=spec: _init_layer(k, cfg, s))(pos_keys)
+    params["units"] = units
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: Dict[str, jax.Array], cfg) -> jax.Array:
+    dt = _dtype(cfg)
+    x = embed(params["embed"], batch["tokens"], dtype=dt)
+    if cfg.norm == "rmsnorm" and cfg.post_block_norm:
+        # Gemma-style embedding scaling
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype=dt)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = dense(params["frontend_proj"], batch["patch_embeds"], dtype=dt)
+        n = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n:, :]], axis=1)
+    return x
+
+
+def _mixer_apply(lp, spec, h, positions, cfg, dt):
+    if spec.mixer in ("attn", "attn_local"):
+        out, _ = attention_layer(lp["mixer"], h, positions, cfg, kind=spec.mixer, dtype=dt)
+        return out
+    if spec.mixer == "mamba":
+        return mamba_layer(lp["mixer"], h, cfg, dtype=dt)
+    if spec.mixer == "rwkv":
+        out, _ = rwkv_tmix(lp["mixer"], h, cfg, dtype=dt)
+        return out
+    raise ValueError(spec.mixer)
+
+
+def _ffn_apply(lp, spec, h, cfg, dt):
+    """Returns (out, aux)."""
+    if spec.ffn == "dense":
+        return mlp(lp["ffn"], h, activation=cfg.activation, dtype=dt), 0.0
+    if spec.ffn == "moe":
+        return moe_layer(lp["ffn"], h, cfg, dtype=dt)
+    if spec.ffn == "rwkv_cmix":
+        out, _ = rwkv_cmix(lp["ffn"], h, cfg, dtype=dt)
+        return out, 0.0
+    raise ValueError(spec.ffn)
+
+
+def _sp_constrain(x, cfg):
+    """Sequence-parallel residual stream (§Perf: collective term).
+
+    Constraining the residual's sequence dim onto ``model`` turns each
+    block's output all-reduce into reduce-scatter (+ a deferred all-gather
+    at the next projection) — half the wire bytes, and the norms between
+    blocks compute on 1/TP of the tokens.  No-op unless enabled.
+    """
+    if not getattr(cfg, "seq_shard_activations", False):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+
+
+def _unit_body_train(cfg):
+    dt = _dtype(cfg)
+
+    def body(carry, unit_params, positions):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            lp = unit_params[f"pos{i}"]
+            h = norm(lp["norm1"], x, kind=cfg.norm)
+            mix = _mixer_apply(lp, spec, h, positions, cfg, dt)
+            if cfg.post_block_norm:
+                mix = norm(lp["norm1_post"], mix, kind=cfg.norm)
+            x = _sp_constrain(x + mix, cfg)
+            h = norm(lp["norm2"], x, kind=cfg.norm)
+            f, aux_i = _ffn_apply(lp, spec, h, cfg, dt)
+            if cfg.post_block_norm:
+                f = norm(lp["norm2_post"], f, kind=cfg.norm)
+            x = _sp_constrain(x + f, cfg)
+            aux = aux + aux_i
+        return x, aux
+
+    return body
+
+
+_REMAT_POLICIES = {
+    "unit": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def lm_hidden(params, batch: Dict[str, jax.Array], cfg) -> Tuple[jax.Array, jax.Array]:
+    """Embeddings → stacked units → final norm.  Returns (hidden, moe_aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    body = _unit_body_train(cfg)
+
+    def scan_fn(carry, unit_params):
+        return body(carry, unit_params, positions), None
+
+    if cfg.remat in _REMAT_POLICIES:
+        scan_fn = jax.checkpoint(scan_fn, policy=_REMAT_POLICIES[cfg.remat], prevent_cse=False)
+
+    from repro.distributed.vma import vary
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, vary(jnp.zeros((), jnp.float32))), params["units"])
+    else:
+        carry = (x, vary(jnp.zeros((), jnp.float32)))
+        for u in range(cfg.n_units):
+            unit = jax.tree.map(lambda leaf: leaf[u], params["units"])
+            carry, _ = scan_fn(carry, unit)
+        x, aux = carry
+    x = norm(params["final_norm"], x, kind=cfg.norm)
+    return x, aux
+
+
+def _logits(params, x: jax.Array, cfg) -> jax.Array:
+    dt = _dtype(cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x, dtype=dt)
+    return softcap(logits, cfg.final_softcap)
+
+
+def train_loss(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg,
+    *,
+    loss_chunk: int = 256,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM cross-entropy, sequence-chunked so [B,S,V] never exists."""
+    x, aux = lm_hidden(params, batch, cfg)
+    targets = batch["targets"]
+    B, S = targets.shape
+    c = min(loss_chunk, S)
+    assert S % c == 0
+    n = S // c
+    xc = x.reshape(B, n, c, -1)
+    tc = targets.reshape(B, n, c)
+
+    def chunk_loss(carry, inp):
+        xx, tt = inp  # [B, c, D], [B, c]
+        logits = _logits(params, xx, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        if getattr(cfg, "gather_ce", False):  # legacy baseline formulation
+            picked = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        else:
+            # one-hot contraction instead of take_along_axis: the gather over
+            # a vocab-sharded logits tensor forces an all-gather of the full
+            # [B, c, V] block per chunk; the contraction stays vocab-local
+            # and reduces with a tiny [B, c] psum (§Perf: sharded-vocab CE).
+            onehot = jax.nn.one_hot(tt, logits.shape[-1], dtype=logits.dtype)
+            picked = jnp.sum(logits * onehot, axis=-1)
+        nll = lse - picked
+        return carry + nll.sum(), None
+
+    if getattr(cfg, "remat_loss_chunk", False):
+        # recompute the [B, c, V] logits in the backward pass instead of
+        # saving one residual per chunk (§Perf: memory term)
+        chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+
+    from repro.distributed.vma import vary
+
+    total, _ = jax.lax.scan(
+        chunk_loss, vary(jnp.zeros((), jnp.float32)), (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(tc, 1, 0))
+    )
+    loss = total / (B * S) + aux
+    return loss, {"loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch: int, max_len: int) -> Dict:
+    """Stacked-per-position cache pytree matching the scan layout."""
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer in ("attn", "attn_local"):
+            # local layers never need more than the window
+            T = max_len
+            if spec.mixer == "attn_local" and cfg.attn_window:
+                T = min(max_len, cfg.attn_window)
+            kv = init_kv_cache(cfg, batch, T, n_layers_of_kind=cfg.n_units, dtype=dt)
+            entry: Dict[str, Any] = {"k": kv["k"], "v": kv["v"]}
+        elif spec.mixer == "mamba":
+            mc = init_mamba_cache(cfg, batch, n_layers_of_kind=cfg.n_units, dtype=dt)
+            entry = {"conv": mc["conv"], "ssm": mc["ssm"]}
+        elif spec.mixer == "rwkv":
+            rc = init_rwkv_cache(cfg, batch, n_layers_of_kind=cfg.n_units, dtype=dt)
+            entry = {"wkv": rc["wkv"], "tshift": rc["tshift"]}
+        else:
+            raise ValueError(spec.mixer)
+        if spec.ffn == "rwkv_cmix":
+            entry["cshift"] = jnp.zeros((cfg.n_units, batch, 1, cfg.d_model), dtype=dt)
+        cache[f"pos{i}"] = entry
+    return cache
+
+
+def _unit_body_decode(cfg):
+    dt = _dtype(cfg)
+
+    def body(x, unit_params, unit_cache, pos):
+        new_cache: Dict[str, Any] = {}
+        for i, spec in enumerate(cfg.pattern):
+            lp = unit_params[f"pos{i}"]
+            lc = unit_cache[f"pos{i}"]
+            nc: Dict[str, Any] = {}
+            h = norm(lp["norm1"], x, kind=cfg.norm)
+            if spec.mixer in ("attn", "attn_local"):
+                # local windows use a ring cache sized to the window: the
+                # cache was allocated at min(max_len, window), so it rolls
+                # exactly when it was clamped to the window size
+                T = lc["k"].shape[1]
+                rolling = spec.mixer == "attn_local" and bool(cfg.attn_window) and T == cfg.attn_window
+                write_pos = pos % T if rolling else pos
+                mix, ck, cv = decode_attention_layer(
+                    lp["mixer"], h, lc["k"], lc["v"], write_pos, cfg,
+                    kind=spec.mixer, dtype=dt, rolling=rolling, abs_pos=pos,
+                )
+                nc["k"], nc["v"] = ck, cv
+            elif spec.mixer == "mamba":
+                mix, conv, ssm = mamba_decode_step(lp["mixer"], h, lc["conv"], lc["ssm"], cfg, dtype=dt)
+                nc["conv"], nc["ssm"] = conv, ssm
+            elif spec.mixer == "rwkv":
+                mix, st = rwkv_tmix(lp["mixer"], h, cfg, dtype=dt, state={"wkv": lc["wkv"], "shift": lc["tshift"]})
+                nc["wkv"], nc["tshift"] = st["wkv"], st["shift"]
+            if cfg.post_block_norm:
+                mix = norm(lp["norm1_post"], mix, kind=cfg.norm)
+            x = x + mix
+            h = norm(lp["norm2"], x, kind=cfg.norm)
+            if spec.ffn == "rwkv_cmix":
+                f, st = rwkv_cmix(lp["ffn"], h, cfg, dtype=dt, state={"shift": lc["cshift"]})
+                nc["cshift"] = st["shift"]
+            else:
+                f, _ = _ffn_apply(lp, spec, h, cfg, dt)
+            if cfg.post_block_norm:
+                f = norm(lp["norm2_post"], f, kind=cfg.norm)
+            x = x + f
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    return body
+
+
+def decode_step(params, cache: Dict, token: jax.Array, pos: jax.Array, cfg):
+    """One decode step.  token: [B, 1] int32; pos: scalar or [B] int32
+    (per-slot positions — continuous batching).
+
+    Returns (new_cache, logits [B, 1, V]).
+    """
+    dt = _dtype(cfg)
+    x = embed(params["embed"], token, dtype=dt)
+    if cfg.post_block_norm:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype=dt)
+    body = _unit_body_decode(cfg)
+
+    def scan_fn(x, inp):
+        unit_params, unit_cache = inp
+        x, new_cache = body(x, unit_params, unit_cache, pos)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(scan_fn, x, (params["units"], cache))
+    else:
+        slices = []
+        for u in range(cfg.n_units):
+            unit_p = jax.tree.map(lambda l: l[u], params["units"])
+            unit_c = jax.tree.map(lambda l: l[u], cache)
+            x, nc = scan_fn(x, (unit_p, unit_c))
+            slices.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *slices)
+    x = norm(params["final_norm"], x, kind=cfg.norm)
+    logits = _logits(params, x, cfg)
+    return new_cache, logits
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg, *, max_len: int):
+    """Forward over a prompt, building decode caches.
+
+    Implemented as hidden-pass + per-position cache fill; attention caches
+    are populated from the layer K/V projections, recurrent caches from the
+    chunked-scan final states.  Returns (cache, last_logits [B,1,V]).
+    """
+    dt = _dtype(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = init_decode_cache(cfg, B, max_len)
+
+    def body(carry, inp):
+        x = carry
+        unit_params, unit_cache = inp
+        new_cache: Dict[str, Any] = {}
+        for i, spec in enumerate(cfg.pattern):
+            lp = unit_params[f"pos{i}"]
+            lc = unit_cache[f"pos{i}"]
+            nc: Dict[str, Any] = {}
+            h = norm(lp["norm1"], x, kind=cfg.norm)
+            if spec.mixer in ("attn", "attn_local"):
+                mix, kv = attention_layer(
+                    lp["mixer"], h, positions, cfg, kind=spec.mixer, dtype=dt, return_kv=True
+                )
+                k_new, v_new = kv
+                T = lc["k"].shape[1]
+                if T >= S:
+                    nc["k"] = jax.lax.dynamic_update_slice_in_dim(lc["k"], k_new.astype(lc["k"].dtype), 0, axis=1)
+                    nc["v"] = jax.lax.dynamic_update_slice_in_dim(lc["v"], v_new.astype(lc["v"].dtype), 0, axis=1)
+                else:  # rolling window cache keeps the tail
+                    nc["k"] = k_new[:, S - T :].astype(lc["k"].dtype)
+                    nc["v"] = v_new[:, S - T :].astype(lc["v"].dtype)
+            elif spec.mixer == "mamba":
+                # rerun the mixer capturing final states
+                from .mamba import mamba_layer_with_state
+
+                mix, conv, ssm = mamba_layer_with_state(lp["mixer"], h, cfg, dtype=dt)
+                nc["conv"], nc["ssm"] = conv.astype(lc["conv"].dtype), ssm
+            elif spec.mixer == "rwkv":
+                mix, st = rwkv_tmix(
+                    lp["mixer"], h, cfg, dtype=dt,
+                    state={"wkv": lc["wkv"], "shift": lc["tshift"]},
+                )
+                nc["wkv"], nc["tshift"] = st["wkv"], st["shift"].astype(lc["tshift"].dtype)
+            if cfg.post_block_norm:
+                mix = norm(lp["norm1_post"], mix, kind=cfg.norm)
+            x = x + mix
+            h = norm(lp["norm2"], x, kind=cfg.norm)
+            if spec.ffn == "rwkv_cmix":
+                f, st = rwkv_cmix(lp["ffn"], h, cfg, dtype=dt, state={"shift": lc["cshift"]})
+                nc["cshift"] = st["shift"].astype(lc["cshift"].dtype)
+            else:
+                f, _ = _ffn_apply(lp, spec, h, cfg, dt)
+            if cfg.post_block_norm:
+                f = norm(lp["norm2_post"], f, kind=cfg.norm)
+            x = x + f
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    else:
+        slices = []
+        for u in range(cfg.n_units):
+            unit_p = jax.tree.map(lambda l: l[u], params["units"])
+            unit_c = jax.tree.map(lambda l: l[u], cache)
+            x, nc = body(x, (unit_p, unit_c))
+            slices.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *slices)
+
+    x = norm(params["final_norm"], x, kind=cfg.norm)
+    last_logits = _logits(params, x[:, -1:, :], cfg)
+    return new_cache, last_logits
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS inputs)
+# ---------------------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def count_active_params(params, cfg) -> int:
+    """Active params per token: MoE expert stacks count top_k/E of their size."""
+    total = count_params(params)
+    if cfg.moe is None:
+        return total
+    inactive = 0
+    units = params["units"]
+    for i, spec in enumerate(cfg.pattern):
+        if spec.ffn != "moe":
+            continue
+        for name in ("w_gate", "w_up", "w_down"):
+            leaf = units[f"pos{i}"]["ffn"][name]["w"]
+            frac_inactive = 1.0 - (cfg.moe.top_k / cfg.moe.n_experts)
+            inactive += int(leaf.size * frac_inactive)
+    return total - inactive

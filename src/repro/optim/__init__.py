@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW, schedules, clipping, int8 EF compression."""
+
+from .adamw import AdamW, AdamWConfig, clip_by_global_norm, cosine_schedule, global_norm
+from .compression import dequantize, ef_quantized_psum, quantize
+
+__all__ = [
+    "AdamW",
+    "AdamWConfig",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "dequantize",
+    "ef_quantized_psum",
+    "quantize",
+]

@@ -1,0 +1,5 @@
+"""Roofline analysis: cost_analysis + HLO collective parsing → 3-term model."""
+
+from .analysis import HW, model_flops, parse_collectives, roofline
+
+__all__ = ["HW", "model_flops", "parse_collectives", "roofline"]

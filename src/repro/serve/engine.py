@@ -1,0 +1,181 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+``serve_step`` (one new token for the whole batch against the KV cache) is
+the function the decode-shape dry-run cells lower — decode_32k runs it at
+B=128 / 32k cache, long_500k at B=1 / 524k cache with a context-parallel
+cache sharding (:func:`repro.distributed.sharding.cache_shardings`).
+
+Continuous batching: fixed slot table; finished sequences (EOS or length)
+free their slot, pending requests prefill into free slots while decode keeps
+running for the rest — the standard production serving loop shape, here
+single-host but mesh-sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import cache_shardings, param_shardings
+
+__all__ = ["ServeConfig", "ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 1024
+    slots: int = 8              # concurrent sequences (decode batch)
+    eos_token: int = 1
+    temperature: float = 0.0    # 0 ⇒ greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ServeConfig, *, mesh=None):
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            params = jax.tree.map(
+                jax.device_put, params, param_shardings(jax.eval_shape(lambda: params), mesh)
+            )
+        self.params = params
+        self.cache = model.init_decode_cache(cfg.slots, cfg.max_len)
+        if mesh is not None:
+            self.cache = jax.tree.map(
+                jax.device_put,
+                self.cache,
+                cache_shardings(jax.eval_shape(lambda: self.cache), mesh, batch=cfg.slots),
+            )
+        # slot bookkeeping (host side)
+        self.slot_req: List[Optional[Request]] = [None] * cfg.slots
+        self.slot_pos = np.zeros(cfg.slots, dtype=np.int32)
+        self.queue: List[Request] = []
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+
+    # -- jitted bodies -----------------------------------------------------------
+    def _decode_impl(self, cache, tokens, pos):
+        new_cache, logits = self.model.decode_step(self.params, cache, tokens, pos)
+        return new_cache, logits
+
+    # -- request intake ----------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> Request:
+        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32), max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        """Prefill pending requests into free slots.
+
+        Single-sequence prefill per admission (row-wise cache splice); batch
+        decode continues for occupied slots — continuous batching.
+        """
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            S = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            if self.model.cfg.is_encdec:
+                from repro.models.encdec import enc_len_for
+
+                batch["frames"] = jnp.zeros(
+                    (1, enc_len_for(self.model.cfg, S), self.model.cfg.frontend_dim),
+                    jnp.dtype(self.model.cfg.dtype),
+                )
+            if self.model.cfg.frontend == "vision":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, self.model.cfg.frontend_tokens, self.model.cfg.frontend_dim),
+                    jnp.dtype(self.model.cfg.dtype),
+                )
+            cache1, last_logits = self.model.prefill(self.params, batch, max_len=self.cfg.max_len)
+            # splice the single-row cache into this slot
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                ),
+                self.cache,
+                cache1,
+            )
+            first = int(self._sample(last_logits)[0, 0])
+            req.out_tokens.append(first)
+            if first == self.cfg.eos_token or len(req.out_tokens) >= req.max_new:
+                req.done = True  # finished at admission; slot stays free
+            else:
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = S
+        # note: admission leaves other slots' cache rows untouched
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    # -- the serving loop ---------------------------------------------------------
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        # batch the last emitted token of every slot at its own position
+        # (inactive rows decode junk into their own cache rows, which is
+        # fine — they are overwritten on the next prefill-admit)
+        tokens = np.zeros((self.cfg.slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+        pos = jnp.asarray(self.slot_pos)  # [slots] per-row positions
+        self.cache, logits = self._decode(self.cache, jnp.asarray(tokens), pos)
+        nxt = np.asarray(self._sample(logits))[:, 0]
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            self.slot_pos[i] += 1
+            if (
+                tok == self.cfg.eos_token
+                or len(req.out_tokens) >= req.max_new
+                or self.slot_pos[i] >= self.cfg.max_len - 1
+            ):
+                req.done = True
+                self.slot_req[i] = None
+        return len(active)
+
+    def run_until_drained(self, requests: List[Request], max_steps: int = 10_000) -> Dict[str, float]:
+        """Serve until every submitted request finishes; returns throughput stats."""
+        t0 = time.perf_counter()
+        steps = 0
+        for _ in range(max_steps):
+            n = self.step()
+            steps += 1
+            if n == 0 and not self.queue:
+                break
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in requests)
+        return {
+            "requests": float(len(requests)),
+            "tokens": float(toks),
+            "steps": float(steps),
+            "wall_s": wall,
+            "tok_per_s": toks / max(wall, 1e-9),
+        }

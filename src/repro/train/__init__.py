@@ -1,0 +1,17 @@
+"""Training substrate: step builder, trainer loop, SCISPACE checkpointing."""
+
+from .checkpoint import CheckpointManager
+from .step import build_train_step, init_state, init_state_abstract, shard_state, state_shardings
+from .trainer import FaultInjector, Trainer, TrainerConfig
+
+__all__ = [
+    "CheckpointManager",
+    "build_train_step",
+    "init_state",
+    "init_state_abstract",
+    "shard_state",
+    "state_shardings",
+    "FaultInjector",
+    "Trainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,46 @@
+"""Run a snippet in a subprocess with a forced multi-device CPU topology.
+
+The main pytest process must keep jax at 1 device (grading spec), so any
+test needing a mesh spawns a child with XLA_FLAGS set before jax imports.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidev(body: str, *, devices: int = 8, timeout: int = 600) -> str:
+    """Execute ``body`` (python source) with N host devices; returns stdout.
+
+    The snippet should print its assertions' evidence; a non-zero exit or
+    raised exception fails the calling test with full output attached.
+    """
+    prelude = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import warnings
+        warnings.filterwarnings("ignore")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(body)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidev snippet failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

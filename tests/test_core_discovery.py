@@ -1,0 +1,99 @@
+"""SDS: extraction modes, async thresholds, query language (§III-B5)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ExtractionMode, NativeSession, Workspace
+from repro.core.query import QueryError, parse_query
+
+
+def _write_sci(ws, path, **attrs):
+    ws.write_scidata(path, {"x": np.zeros(4, np.float32)}, attrs)
+
+
+def test_inline_sync_immediately_searchable(collab):
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+    _write_sci(ws, "/s/a.sci", location="pacific", daynight=1)
+    _write_sci(ws, "/s/b.sci", location="atlantic", daynight=0)
+    assert ws.search_paths("location = pacific") == ["/s/a.sci"]
+    assert ws.search_paths("daynight = 0") == ["/s/b.sci"]
+
+
+def test_inline_async_drains_on_threshold(collab):
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_ASYNC)
+    _write_sci(ws, "/a/a.sci", tagno=7)
+    # not indexed yet (only a registration message was sent)
+    pending = sum(d.discovery.pending_count() for d in collab.dtns)
+    assert pending == 1
+    assert ws.search_paths("tagno = 7") == []
+    # drain explicitly (the worker thread path is covered below)
+    for d in collab.dtns:
+        d.discovery.drain_pending()
+    assert ws.search_paths("tagno = 7") == ["/a/a.sci"]
+
+
+def test_async_worker_thread(collab):
+    collab.start_async_indexers(max_pending=4, max_age_s=0.05, poll_s=0.01)
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_ASYNC)
+    for i in range(8):
+        _write_sci(ws, f"/w/f{i}.sci", idx=i)
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        if len(ws.search_paths("idx > -1")) == 8:
+            break
+        time.sleep(0.02)
+    assert len(ws.search_paths("idx > -1")) == 8
+
+
+def test_lw_offline_indexing(collab):
+    """Local-write + offline index: discoverable without any workspace write."""
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write_scidata("/lw/x.sci", {"d": np.ones(2, np.float32)}, {"instrument": "modis"})
+    native.offline_index(["/lw/x.sci"])
+    ws = Workspace(collab, "bob", "dc1")
+    assert ws.search_paths("instrument = modis") == ["/lw/x.sci"]
+
+
+def test_query_operators(collab):
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+    for i, loc in enumerate(["arctic", "atlantic", "pacific"]):
+        _write_sci(ws, f"/q/{loc}.sci", location=loc, depth=float(i * 10), level=i)
+    assert ws.search_paths("level > 0") == ["/q/atlantic.sci", "/q/pacific.sci"]
+    assert ws.search_paths("level < 1") == ["/q/arctic.sci"]
+    assert ws.search_paths("depth >= 10.0") == ["/q/atlantic.sci", "/q/pacific.sci"]
+    assert ws.search_paths("location like a%") == ["/q/arctic.sci", "/q/atlantic.sci"]
+    assert ws.search_paths("level != 1") == ["/q/arctic.sci", "/q/pacific.sci"]
+
+
+def test_manual_tagging(collab):
+    ws = Workspace(collab, "alice", "dc0")
+    ws.write("/t/raw.bin", b"not scidata")
+    ws.tag("/t/raw.bin", "quality", "gold")
+    assert ws.search_paths("quality = gold") == ["/t/raw.bin"]
+
+
+def test_stat_attributes_indexed(collab):
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+    _write_sci(ws, "/fs/a.sci", z=1)
+    rows = ws.search("fs.size > 0")
+    assert any(r["path"] == "/fs/a.sci" for r in rows)
+
+
+def test_query_parse_errors():
+    with pytest.raises(QueryError):
+        parse_query("no-operator-here")
+    with pytest.raises(QueryError):
+        parse_query("a ~ b")
+
+
+def test_extraction_filter(collab):
+    """Collaborator-specified attribute list restricts what is indexed."""
+    ws = Workspace(
+        collab, "alice", "dc0",
+        extraction_mode=ExtractionMode.INLINE_SYNC, attr_filter=["keep"],
+    )
+    _write_sci(ws, "/f/a.sci", keep=1, drop=2)
+    assert ws.search_paths("keep = 1") == ["/f/a.sci"]
+    assert ws.search_paths("drop = 2") == []

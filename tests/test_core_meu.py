@@ -1,0 +1,89 @@
+"""MEU export protocol: scan, prune, single-batch commit (§III-B3, Fig. 5)."""
+
+import pytest
+
+from repro.core import MEU, NativeSession, Workspace
+
+
+def _tree(native, n_dirs=3, files_per_dir=4):
+    paths = []
+    for d in range(n_dirs):
+        for f in range(files_per_dir):
+            p = f"/tree/d{d}/f{f}.bin"
+            native.write(p, b"x" * (f + 1))
+            paths.append(p)
+    return paths
+
+
+def test_export_publishes_everything(collab):
+    native = NativeSession(collab.dc("dc0"), "alice")
+    paths = _tree(native)
+    rep = MEU(collab, collab.dc("dc0"), "alice").export("/tree")
+    assert rep.exported_files == len(paths)
+    ws = Workspace(collab, "bob", "dc1")
+    assert {e["path"] for e in ws.find("/tree") if not e["is_dir"]} == set(paths)
+
+
+def test_export_is_idempotent_and_prunes(collab):
+    """Second export scans nothing new: the sync xattr prunes subtrees."""
+    native = NativeSession(collab.dc("dc0"), "alice")
+    _tree(native)
+    meu = MEU(collab, collab.dc("dc0"), "alice")
+    first = meu.export("/tree")
+    second = meu.export("/tree")
+    assert first.exported_files > 0
+    assert second.exported_files == 0 and second.exported_dirs == 0
+    # root flag prunes the entire walk
+    assert second.pruned_dirs >= 1 or second.scanned_dirs <= 1
+
+
+def test_incremental_export_after_new_write(collab):
+    """Only the dirty subtree is re-exported (ancestor invalidation)."""
+    native = NativeSession(collab.dc("dc0"), "alice")
+    _tree(native)
+    meu = MEU(collab, collab.dc("dc0"), "alice")
+    meu.export("/tree")
+    native.write("/tree/d1/new.bin", b"fresh")
+    rep = meu.export("/tree")
+    assert rep.exported_files == 1
+    # untouched sibling subtrees were pruned, not rescanned
+    assert rep.pruned_dirs >= 1
+
+
+def test_single_batched_rpc_per_dtn(collab):
+    """'packs all unsynchronized metadata into a single message' — one
+    batch_upsert per owning DTN, regardless of file count."""
+    native = NativeSession(collab.dc("dc0"), "alice")
+    for i in range(200):
+        native.create(f"/many/f{i:04d}")
+    rep = MEU(collab, collab.dc("dc0"), "alice").export("/many")
+    assert rep.exported_files == 200
+    assert rep.rpc_calls <= len(collab.dtns)
+
+
+def test_fine_grained_subset_sharing(collab):
+    """exclude= publishes only part of a dataset (§III-B3)."""
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write("/set/keep/a.bin", b"1")
+    native.write("/set/skip/b.bin", b"2")
+    meu = MEU(collab, collab.dc("dc0"), "alice")
+    meu.export("/set", exclude=lambda p: p.startswith("/set/skip"))
+    ws = Workspace(collab, "bob", "dc1")
+    files = {e["path"] for e in ws.find("/set") if not e["is_dir"]}
+    assert files == {"/set/keep/a.bin"}
+
+
+def test_workspace_and_native_meu_equivalent_metadata(collab):
+    """A file written via the workspace and one exported by MEU have the
+    same metadata surface (size, owner, sync) in the global namespace."""
+    ws = Workspace(collab, "alice", "dc0")
+    ws.write("/eq/direct.bin", b"abcdef")
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write("/eq/native.bin", b"abcdef")
+    MEU(collab, collab.dc("dc0"), "alice").export("/eq")
+    viewer = Workspace(collab, "bob", "dc1")
+    d = viewer.stat("/eq/direct.bin")
+    n = viewer.stat("/eq/native.bin")
+    assert d["size"] == n["size"] == 6
+    assert d["owner"] == n["owner"] == "alice"
+    assert d["sync"] == n["sync"] == 1

@@ -1,0 +1,125 @@
+"""Workspace (scifs) semantics: unified namespace, placement, visibility."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MEU,
+    ExtractionMode,
+    NativeSession,
+    Workspace,
+    hash_placement,
+)
+
+
+def test_write_read_roundtrip(collab):
+    ws = Workspace(collab, "alice", "dc0")
+    ws.write("/proj/a.bin", b"hello world")
+    assert ws.read("/proj/a.bin") == b"hello world"
+    st = ws.stat("/proj/a.bin")
+    assert st["size"] == 11 and st["owner"] == "alice" and st["sync"] == 1
+
+
+def test_unified_namespace_across_collaborators(collab):
+    """Both collaborators see one global view regardless of home DC."""
+    alice = Workspace(collab, "alice", "dc0")
+    bob = Workspace(collab, "bob", "dc1")
+    alice.write("/shared/from_alice.txt", b"a")
+    bob.write("/shared/from_bob.txt", b"b")
+    for ws in (alice, bob):
+        paths = [e["path"] for e in ws.find("/shared")]
+        assert paths == ["/shared/from_alice.txt", "/shared/from_bob.txt"]
+    # cross-collaborator read
+    assert bob.read("/shared/from_alice.txt") == b"a"
+
+
+def test_hash_placement_consistency(collab):
+    """Metadata lands on the DTN selected by the pathname hash."""
+    ws = Workspace(collab, "alice", "dc0")
+    for i in range(20):
+        path = f"/d/file{i}.bin"
+        ws.write(path, b"x")
+        owner = collab.dtns[hash_placement(path, len(collab.dtns))]
+        assert owner.metadata.lookup(path), path
+        others = [d for d in collab.dtns if d.dtn_id != owner.dtn_id]
+        assert not any(d.metadata.lookup(path) for d in others)
+
+
+def test_ls_merges_all_dtns(collab):
+    ws = Workspace(collab, "alice", "dc0")
+    names = [f"/dir/f{i}" for i in range(16)]
+    for n in names:
+        ws.write(n, b".")
+    listed = [e["path"] for e in ws.ls("/dir")]
+    assert listed == sorted(names)
+    # entries really are spread over multiple DTNs (hash placement)
+    owners = {hash_placement(n, len(collab.dtns)) for n in names}
+    assert len(owners) > 1
+
+
+def test_sync_flag_controls_visibility(collab):
+    """Natively-written files are invisible until MEU exports them (§III-B3)."""
+    ws = Workspace(collab, "alice", "dc0")
+    native = NativeSession(collab.dc("dc1"), "bob")
+    native.write("/data/unsynced.bin", b"payload")
+    assert ws.find("/data") == []
+    MEU(collab, collab.dc("dc1"), "bob").export("/data")
+    found = [e["path"] for e in ws.find("/data")]
+    assert "/data/unsynced.bin" in found
+    # and the data plane serves it through the workspace
+    assert ws.read("/data/unsynced.bin") == b"payload"
+
+
+def test_namespace_scope_local_vs_global(collab):
+    """Template namespaces: local scope hides, global scope shares (§III-B4)."""
+    collab.define_namespace("bob-private", "local", "bob", "/ns/bob")
+    collab.define_namespace("team", "global", "bob", "/ns/team")
+    bob = Workspace(collab, "bob", "dc1")
+    alice = Workspace(collab, "alice", "dc0")
+    bob.write("/ns/bob/secret.txt", b"s")
+    bob.write("/ns/team/shared.txt", b"t")
+    assert [e["path"] for e in alice.find("/ns")] == ["/ns/team/shared.txt"]
+    assert [e["path"] for e in bob.find("/ns")] == [
+        "/ns/bob/secret.txt",
+        "/ns/team/shared.txt",
+    ]
+
+
+def test_multiple_collaborations_same_scientist(collab):
+    """One scientist in two collaborations with separate namespaces."""
+    collab.define_namespace("collab-A", "local", "carol", "/A")
+    collab.define_namespace("collab-B", "local", "carol", "/B")
+    carol = Workspace(collab, "carol", "dc0")
+    carol.write("/A/x.bin", b"1")
+    carol.write("/B/y.bin", b"2")
+    dave = Workspace(collab, "dave", "dc1")
+    assert dave.find("/A") == [] and dave.find("/B") == []
+    assert len(carol.find("/A")) == 1 and len(carol.find("/B")) == 1
+
+
+def test_delete_owner_only(collab):
+    alice = Workspace(collab, "alice", "dc0")
+    bob = Workspace(collab, "bob", "dc1")
+    alice.write("/del/a.txt", b"x")
+    with pytest.raises(PermissionError):
+        bob.delete("/del/a.txt")
+    alice.delete("/del/a.txt")
+    assert alice.stat("/del/a.txt") is None
+
+
+def test_scidata_write_and_attrs(collab):
+    ws = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ws.write_scidata("/sci/t.sci", {"temp": arr}, {"location": "pacific", "daynight": 1})
+    attrs = ws.read_attrs("/sci/t.sci")
+    assert attrs == {"location": "pacific", "daynight": 1}
+    np.testing.assert_array_equal(ws.read_dataset("/sci/t.sci", "temp"), arr)
+
+
+def test_rpc_accounting(collab):
+    ws = Workspace(collab, "alice", "dc0")
+    before = ws.rpc_stats().get("calls", 0)
+    ws.write("/acct/f.bin", b"abc")
+    after = ws.rpc_stats()["calls"]
+    # the five-op FUSE sequence: getattr, lookup, create, (data write), update
+    assert after - before >= 4

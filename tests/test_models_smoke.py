@@ -1,0 +1,169 @@
+"""Per-arch smoke tests: reduced same-family configs, one fwd/train step on
+CPU, asserting output shapes + finiteness (the assignment's required smokes)."""
+
+from dataclasses import replace as dataclasses_replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_variant
+from repro.configs.base import ShapeConfig
+from repro.models.model import Model
+
+TINY = ShapeConfig("tiny", "train", 32, 2)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(arch):
+    cfg = smoke_variant(ARCHS[arch])
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = model.make_batch(key, TINY)
+    loss, metrics = model.train_loss(params, batch, loss_chunk=16)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # one SGD step keeps everything finite
+    grads = jax.grad(lambda p: model.train_loss(p, batch, loss_chunk=16)[0])(params)
+    stepped = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    loss2, _ = model.train_loss(stepped, batch, loss_chunk=16)
+    assert bool(jnp.isfinite(loss2)), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_prefill_decode(arch):
+    cfg = smoke_variant(ARCHS[arch])
+    model = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = model.make_batch(key, TINY)
+    cache, logits = model.prefill(params, batch, max_len=64)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    cache, logits2 = model.decode_step(params, cache, tok, jnp.int32(32))
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "gemma2-2b", "rwkv6-7b", "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch):
+    """prefill + decode_step reproduces the training-forward logits."""
+    cfg = smoke_variant(ARCHS[arch])
+    if cfg.moe is not None:
+        # capacity drops differ between S-token forward and 1-token decode;
+        # exact equivalence needs drop-free capacity
+        cfg = cfg.replace(moe=dataclasses_replace(cfg.moe, capacity_factor=8.0))
+    model = Model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    S = 16
+    tokens = jax.random.randint(key, (1, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :S], "targets": tokens[:, 1:]}
+    # full forward logits at the last prompt position
+    from repro.models import transformer as T
+
+    hidden, _ = T.lm_hidden(params, batch, cfg)
+    full_logits = T._logits(params, hidden[:, -1:, :], cfg)
+    cache, pre_logits = model.prefill(params, batch, max_len=32)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits, np.float32), np.asarray(full_logits, np.float32),
+        atol=2e-3, rtol=2e-3,
+    )
+    # decode one token and compare against forward on the extended sequence
+    nxt = tokens[:, S : S + 1]
+    _, dec_logits = model.decode_step(params, cache, nxt, jnp.int32(S))
+    batch2 = {"tokens": tokens[:, : S + 1], "targets": tokens[:, : S + 1]}
+    hidden2, _ = T.lm_hidden(params, batch2, cfg)
+    fwd_logits = T._logits(params, hidden2[:, -1:, :], cfg)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32), np.asarray(fwd_logits, np.float32),
+        atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_local_window_rolling_cache_equivalence():
+    """Gemma2-style local attention: ring cache decode == linear cache decode."""
+    cfg = smoke_variant(ARCHS["gemma2-2b"])  # window 16 after smoke reduction
+    model = Model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    S, extra = 8, 16  # decode past the window size
+    tokens = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": tokens}
+    # rolling cache (max_len > window ⇒ local layers get ring buffers)
+    cache_roll, logits_r = model.prefill(params, batch, max_len=64)
+    # linear cache (max_len == window ⇒ no rolling)
+    assert cfg.attn_window == 16
+    ref_tokens = [int(jnp.argmax(logits_r[0, -1]))]
+    cur = cache_roll
+    for t in range(extra):
+        cur, lg = model.decode_step(
+            params, cur, jnp.asarray([[ref_tokens[-1]]], jnp.int32), jnp.int32(S + t)
+        )
+        ref_tokens.append(int(jnp.argmax(lg[0, -1])))
+    # reference: full forward over the whole sequence (no cache at all)
+    seq = jnp.concatenate([tokens, jnp.asarray([ref_tokens[:-1]], jnp.int32)], axis=1)
+    from repro.models import transformer as T
+
+    hidden, _ = T.lm_hidden(params, {"tokens": seq}, cfg)
+    fwd = T._logits(params, hidden[:, -1:, :], cfg)
+    assert int(jnp.argmax(fwd[0, -1])) == ref_tokens[-1]
+
+
+def test_vlm_patch_splice():
+    cfg = smoke_variant(ARCHS["internvl2-2b"])
+    model = Model(cfg)
+    key = jax.random.PRNGKey(4)
+    params = model.init(key)
+    batch = model.make_batch(key, TINY)
+    assert "patch_embeds" in batch and batch["patch_embeds"].shape == (2, 8, 32)
+    loss, _ = model.train_loss(params, batch, loss_chunk=16)
+    assert bool(jnp.isfinite(loss))
+    # patches actually change the output
+    batch2 = dict(batch, patch_embeds=batch["patch_embeds"] + 1.0)
+    loss2, _ = model.train_loss(params, batch2, loss_chunk=16)
+    assert float(loss) != float(loss2)
+
+
+def test_encdec_cross_attention_uses_frames():
+    cfg = smoke_variant(ARCHS["seamless-m4t-medium"])
+    model = Model(cfg)
+    key = jax.random.PRNGKey(5)
+    params = model.init(key)
+    batch = model.make_batch(key, TINY)
+    loss, _ = model.train_loss(params, batch, loss_chunk=16)
+    batch2 = dict(batch, frames=batch["frames"] * 2.0)
+    loss2, _ = model.train_loss(params, batch2, loss_chunk=16)
+    assert float(loss) != float(loss2)
+
+
+def test_param_counts_match_assigned_scale():
+    """Full configs hit the assigned parameter scale (±35%) — sanity that the
+    configs encode the right architectures (abstract init, no allocation)."""
+    expected = {
+        "jamba-v0.1-52b": 52e9,
+        "codeqwen1.5-7b": 7e9,
+        "gemma2-2b": 2.6e9,
+        "nemotron-4-15b": 15e9,
+        "stablelm-3b": 3e9,
+        "rwkv6-7b": 7e9,
+        "olmoe-1b-7b": 7e9,
+    }
+    for arch, n_exp in expected.items():
+        model = Model(ARCHS[arch])
+        n = sum(int(x.size) for x in jax.tree.leaves(model.init_abstract()))
+        assert 0.65 * n_exp < n < 1.35 * n_exp, (arch, n, n_exp)
+
+
+def test_moe_active_params_fraction():
+    from repro.models import transformer as T
+
+    cfg = smoke_variant(ARCHS["olmoe-1b-7b"])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    total = T.count_params(params)
+    active = T.count_active_params(params, cfg)
+    assert active < total

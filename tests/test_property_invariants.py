@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MEU, NativeSession, Workspace, hash_placement, pack, unpack
+from repro.core.metadata import path_hash
+from repro.data.pipeline import SyntheticLM, ShardedPipeline, WorkStealingBalancer
+from repro.optim.compression import dequantize, quantize
+
+# -- message codec -------------------------------------------------------------
+
+_scalar = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(min_value=-(2**62), max_value=2**62),
+    st.floats(allow_nan=False, allow_infinity=False),
+    st.text(max_size=64),
+    st.binary(max_size=64),
+)
+_msg = st.recursive(
+    _scalar,
+    lambda inner: st.one_of(
+        st.lists(inner, max_size=5),
+        st.dictionaries(st.text(max_size=8), inner, max_size=5),
+    ),
+    max_leaves=20,
+)
+
+
+@given(_msg)
+@settings(max_examples=200, deadline=None)
+def test_pack_unpack_roundtrip(obj):
+    out = unpack(pack(obj))
+    # tuples serialize as lists — normalize before comparing
+    def norm(x):
+        if isinstance(x, tuple):
+            return [norm(i) for i in x]
+        if isinstance(x, list):
+            return [norm(i) for i in x]
+        if isinstance(x, dict):
+            return {k: norm(v) for k, v in x.items()}
+        if isinstance(x, bytearray):
+            return bytes(x)
+        return x
+
+    assert out == norm(obj)
+
+
+# -- hash placement ---------------------------------------------------------------
+
+@given(st.text(min_size=1, max_size=128), st.integers(min_value=1, max_value=64))
+@settings(max_examples=200, deadline=None)
+def test_hash_placement_stable_and_in_range(path, n):
+    a = hash_placement(path, n)
+    b = hash_placement(path, n)
+    assert a == b and 0 <= a < n
+
+
+@given(st.integers(min_value=2, max_value=8))
+@settings(max_examples=10, deadline=None)
+def test_hash_placement_spreads(n_dtns):
+    """Load distribution over DTNs is within 3× of fair for 1000 paths."""
+    counts = [0] * n_dtns
+    for i in range(1000):
+        counts[hash_placement(f"/load/file{i}.bin", n_dtns)] += 1
+    assert max(counts) < 3 * (1000 / n_dtns)
+
+
+# -- MEU idempotence (randomized trees) ----------------------------------------
+
+@given(
+    st.lists(
+        st.lists(st.sampled_from("abcd"), min_size=1, max_size=3),
+        min_size=1,
+        max_size=12,
+    )
+)
+@settings(max_examples=25, deadline=None)
+def test_meu_export_exactly_once(path_parts):
+    from repro.core import Collaboration
+
+    collab = Collaboration()
+    collab.add_datacenter("dc0", n_dtns=2)
+    collab.add_datacenter("dc1", n_dtns=1)
+    native = NativeSession(collab.dc("dc0"), "u")
+    paths = set()
+    for i, parts in enumerate(path_parts):
+        # suffix keeps leaf names from colliding with directory names
+        p = "/r/" + "/".join(parts) + f"_{i}.bin"
+        native.write(p, b"x")
+        paths.add(p)
+    meu = MEU(collab, collab.dc("dc0"), "u")
+    first = meu.export("/r")
+    second = meu.export("/r")
+    assert first.exported_files == len(paths)
+    assert second.total_exported() == 0
+    ws = Workspace(collab, "v", "dc1")
+    assert {e["path"] for e in ws.find("/r") if not e["is_dir"]} == paths
+    collab.close()
+
+
+# -- quantization error bound ------------------------------------------------------
+
+@given(
+    st.lists(st.floats(min_value=-1e3, max_value=1e3, width=32), min_size=1, max_size=256)
+)
+@settings(max_examples=100, deadline=None)
+def test_quantize_error_bounded_by_half_step(vals):
+    x = np.asarray(vals, np.float32)
+    q, scale, ef = quantize(x)
+    deq = np.asarray(dequantize(q, scale))
+    step = float(scale)
+    assert np.all(np.abs(deq - x) <= step / 2 + 1e-6)
+    # error feedback carries exactly the residual
+    np.testing.assert_allclose(np.asarray(ef), x - deq, atol=1e-6)
+
+
+def test_error_feedback_telescopes():
+    """Accumulated EF-compressed sums converge to the true running sum."""
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(512).astype(np.float32)
+    ef = np.zeros_like(g)
+    acc = np.zeros_like(g)
+    for step in range(50):
+        q, s, ef = quantize(g, ef)
+        acc = acc + np.asarray(dequantize(q, s))
+    true = g * 50
+    rel = np.abs(acc - true).mean() / np.abs(true).mean()
+    assert rel < 0.01, rel
+
+
+# -- data pipeline ---------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=1000), st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_pipeline_shards_partition_global_batch(step, dp):
+    gen = SyntheticLM(vocab_size=512, seq_len=32, period=8)
+    global_rows = ShardedPipeline(gen, global_batch=8, dp_rank=0, dp_size=1).batch_at(step)
+    shards = [
+        ShardedPipeline(gen, global_batch=8, dp_rank=r, dp_size=dp).batch_at(step)
+        for r in range(dp)
+    ]
+    stacked = np.concatenate([s["tokens"] for s in shards], axis=0)
+    np.testing.assert_array_equal(stacked, global_rows["tokens"])
+
+
+def test_balancer_conserves_and_derates_stragglers():
+    bal = WorkStealingBalancer(n_hosts=4, microbatches_per_step=16)
+    for _ in range(20):
+        bal.report(0, 2.0)  # straggler
+        for h in (1, 2, 3):
+            bal.report(h, 1.0)
+    quota = bal.assign()
+    assert sum(quota) == 16
+    assert quota[0] == min(quota)
+    assert quota[0] >= 1
