@@ -6,6 +6,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   fig7   block-size sweep          fig8   collaborator scaling
   fig9a  MEU export                fig9b  extraction modes
   tab2   query latency/hit-ratio   fig9c  end-to-end analysis
+  fig9d  metadata plane: pipelined five-op writes + scatter-gather query
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -27,6 +28,7 @@ from benchmarks import (
     fig9a_meu,
     fig9b_extraction,
     fig9c_end2end,
+    fig9d_plane,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -57,6 +59,7 @@ def main(argv=None) -> int:
         ("fig9b_extraction", fig9b_extraction.main),
         ("tab2_query", tab2_query.main),
         ("fig9c_end2end", fig9c_end2end.main),
+        ("fig9d_plane", fig9d_plane.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

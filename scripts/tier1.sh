@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Tier-1 gate: run the repo's pytest suite and report the pass/fail delta
+# against the recorded seed baseline (ROADMAP.md "Tier-1 verify").
+#
+#   scripts/tier1.sh [extra pytest args...]
+#
+# Exits non-zero when the suite is WORSE than the seed baseline: fewer
+# passes, more failures, or more collection errors.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+# Seed baseline (v0): 103 passed / 9 failed / 2 collection errors.
+BASE_PASS=103
+BASE_FAIL=9
+BASE_ERR=2
+
+OUT=$(PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q --continue-on-collection-errors "$@" 2>&1)
+STATUS=$?
+SUMMARY=$(printf '%s\n' "$OUT" | tail -1)
+printf '%s\n' "$OUT" | tail -20
+
+count() {  # count <word> — pull "N <word>" out of the pytest summary line
+    printf '%s\n' "$SUMMARY" | grep -oE "[0-9]+ $1" | grep -oE '[0-9]+' | head -1
+}
+PASS=$(count passed); PASS=${PASS:-0}
+FAIL=$(count failed); FAIL=${FAIL:-0}
+ERR=$(count "errors?"); ERR=${ERR:-0}
+
+echo
+echo "tier-1: ${PASS} passed / ${FAIL} failed / ${ERR} errors"
+echo "seed:   ${BASE_PASS} passed / ${BASE_FAIL} failed / ${BASE_ERR} errors"
+echo "delta:  $((PASS - BASE_PASS)) passed / $((FAIL - BASE_FAIL)) failed / $((ERR - BASE_ERR)) errors"
+
+if [ "$PASS" -lt "$BASE_PASS" ] || [ "$FAIL" -gt "$BASE_FAIL" ] || [ "$ERR" -gt "$BASE_ERR" ]; then
+    echo "tier-1: WORSE than seed baseline"
+    exit 1
+fi
+echo "tier-1: OK (no worse than seed baseline)"
+exit 0

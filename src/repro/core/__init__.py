@@ -3,12 +3,19 @@
 Layers (bottom-up):
 
 - :mod:`repro.core.backends`   — per-data-center PFS stand-ins (+ xattrs)
-- :mod:`repro.core.rpc`        — message codec + client/server + channels
+- :mod:`repro.core.rpc`        — message codec + client/server + channels,
+  batched (``call_batch``) and pipelined (``RpcPipeline``) calls
 - :mod:`repro.core.scidata`    — self-describing scientific container (HDF5 stand-in)
 - :mod:`repro.core.metadata`   — SQLite DB shards + hash placement (Fig. 4)
 - :mod:`repro.core.namespace`  — template namespaces, local/global scopes
+- :mod:`repro.core.query`      — query language + scatter-gather planner
+  (predicate pushdown per shard, central union/intersect merge)
 - :mod:`repro.core.discovery`  — Scientific Discovery Service + 3 extraction modes
 - :mod:`repro.core.cluster`    — DTNs / data centers / collaboration fabric
+- :mod:`repro.core.plane`      — the **unified metadata plane**: pooled
+  per-DTN clients, batched/pipelined RPC, bounded scatter-gather fan-out,
+  and a write-back attribute cache with path-hash invalidation.  Every
+  client (workspace, MEU, benchmarks) talks to services through it.
 - :mod:`repro.core.workspace`  — the scifs client (unified namespace) + native access
 - :mod:`repro.core.meu`        — Metadata Export Utility (local-write export protocol)
 """
@@ -19,8 +26,9 @@ from .discovery import AsyncIndexer, DiscoveryService, ExtractionMode
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement, path_hash
 from .meu import MEU, ExportReport
 from .namespace import DEFAULT_NS, Namespace, NamespaceRegistry
-from .query import Query, QueryError, parse_query
-from .rpc import Channel, RpcClient, RpcError, RpcServer, pack, unpack
+from .plane import AttrCache, InvalidationBus, ServicePlane
+from .query import Query, QueryError, ScatterGatherPlan, parse_query, plan_query
+from .rpc import Channel, RpcClient, RpcError, RpcFuture, RpcPipeline, RpcServer, pack, unpack
 from .scidata import (
     SciFile,
     attr_type_of,
@@ -52,12 +60,19 @@ __all__ = [
     "DEFAULT_NS",
     "Namespace",
     "NamespaceRegistry",
+    "AttrCache",
+    "InvalidationBus",
+    "ServicePlane",
     "Query",
     "QueryError",
+    "ScatterGatherPlan",
     "parse_query",
+    "plan_query",
     "Channel",
     "RpcClient",
     "RpcError",
+    "RpcFuture",
+    "RpcPipeline",
     "RpcServer",
     "pack",
     "unpack",

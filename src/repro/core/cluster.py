@@ -21,6 +21,7 @@ from .backends import MemoryBackend, PosixBackend, StorageBackend
 from .discovery import AsyncIndexer, DiscoveryService
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement
 from .namespace import NamespaceRegistry
+from .plane import InvalidationBus
 from .rpc import Channel, RpcServer
 
 __all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy"]
@@ -82,11 +83,13 @@ class DataCenter:
         """
         if not self.dtns:
             raise RuntimeError(f"DC {self.dc_id} has no DTNs")
-        done = 0
+        by_dtn: Dict[int, List[str]] = {}
         for path in paths:
-            dtn = self.dtns[hash_placement(path, len(self.dtns))]
-            dtn.discovery.extract_and_index(path, attr_filter)
-            done += 1
+            by_dtn.setdefault(hash_placement(path, len(self.dtns)), []).append(path)
+        done = 0
+        for dtn_idx, group in by_dtn.items():
+            done += len(group)
+            self.dtns[dtn_idx].discovery.batch_index(group, attr_filter)
         return done
 
 
@@ -111,6 +114,8 @@ class Collaboration:
         self.dtns: List[DTN] = []  # global DTN list; index = placement target
         self.namespaces = NamespaceRegistry()
         self.channel_policy: ChannelPolicy = channel_policy or _free_channels
+        #: collaboration-wide attribute-cache invalidation fabric (plane layer)
+        self.invalidations = InvalidationBus()
         self._lock = threading.Lock()
 
     # -- construction -----------------------------------------------------------

@@ -30,7 +30,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 from .backends import StorageBackend
 from .metadata import DiscoveryShard
-from .query import Query, parse_query
+from .query import Predicate, Query, parse_query
 from .scidata import attr_type_of, read_header
 
 __all__ = ["ExtractionMode", "DiscoveryService", "AsyncIndexer"]
@@ -86,17 +86,13 @@ class DiscoveryService:
             packed,
         )
 
-    def extract_and_index(
+    def _extract_rows(
         self,
         path: str,
         attr_filter: Optional[List[str]] = None,
         stat_size: Optional[int] = None,
-    ) -> int:
-        """Open the (scidata) file header, extract matching attrs, index them.
-
-        This is the unit of work of every mode; the modes differ in *when and
-        where* it runs relative to the write.
-        """
+    ) -> List[Dict[str, Any]]:
+        """Read a file's self-describing header + stat into attribute rows."""
         rows: List[Dict[str, Any]] = []
         try:
             sci = read_header(self.backend, path)
@@ -114,10 +110,45 @@ class DiscoveryService:
         except FileNotFoundError:
             if stat_size is not None:
                 rows.append({"path": path, "name": "fs.size", "value": int(stat_size)})
+        return rows
+
+    def extract_and_index(
+        self,
+        path: str,
+        attr_filter: Optional[List[str]] = None,
+        stat_size: Optional[int] = None,
+    ) -> int:
+        """Open the (scidata) file header, extract matching attrs, index them.
+
+        This is the unit of work of every mode; the modes differ in *when and
+        where* it runs relative to the write.
+        """
+        rows = self._extract_rows(path, attr_filter, stat_size)
         self.extract_count += 1
         # replace any previous index rows for this file
         self.shard.execute("DELETE FROM attributes WHERE path=?", (path,))
         return self.insert_attributes(rows)
+
+    def batch_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
+        """Extract + index many files as one shard transaction (one RPC).
+
+        The per-file work (header read, extraction) is unchanged; what
+        collapses is the database contact pattern — one DELETE sweep and one
+        multi-row INSERT instead of a statement pair per file — and, when
+        called remotely, the channel round-trips.
+        """
+        paths = list(dict.fromkeys(paths))  # idempotent like extract_and_index
+        if not paths:
+            return 0
+        all_rows: List[Dict[str, Any]] = []
+        for path in paths:
+            all_rows.extend(self._extract_rows(path, attr_filter))
+        self.extract_count += len(paths)
+        self.shard.executemany(
+            "DELETE FROM attributes WHERE path=?", [(p,) for p in paths]
+        )
+        self.insert_attributes(all_rows)
+        return len(paths)
 
     def tag(self, path: str, name: str, value: Any) -> int:
         """Manual / collaborator-defined tagging (§III-B5)."""
@@ -137,17 +168,24 @@ class DiscoveryService:
         return n
 
     def drain_pending(self, attr_filter: Optional[List[str]] = None, limit: int = -1) -> int:
-        """Dequeue and index pending registrations (the async worker's body)."""
+        """Dequeue and index pending registrations (the async worker's body).
+
+        The whole drain is one :meth:`batch_index` — a single shard
+        transaction per DTN instead of a statement pair per file.  Duplicate
+        registrations for the same path collapse into one extraction.
+        """
         sql = "SELECT id, path FROM pending_index ORDER BY id"
         if limit > 0:
             sql += f" LIMIT {int(limit)}"
         rows = self.shard.execute(sql)
-        done = 0
-        for row_id, path in rows:
-            self.extract_and_index(path, attr_filter)
-            self.shard.execute("DELETE FROM pending_index WHERE id=?", (row_id,))
-            done += 1
-        return done
+        if not rows:
+            return 0
+        unique_paths = list(dict.fromkeys(path for _, path in rows))
+        self.batch_index(unique_paths, attr_filter)
+        self.shard.executemany(
+            "DELETE FROM pending_index WHERE id=?", [(row_id,) for row_id, _ in rows]
+        )
+        return len(rows)
 
     # -- search -------------------------------------------------------------------
     def query(self, text: str) -> List[str]:
@@ -156,13 +194,35 @@ class DiscoveryService:
         sql, params = q.to_sql()
         return [r[0] for r in self.shard.execute(sql, params)]
 
-    def query_with_values(self, text: str) -> List[Dict[str, Any]]:
-        """Query + return the matched files' full attribute rows (packed reply).
+    def query_predicate(
+        self, attr: str, op: str, value: Any, attr_type: str
+    ) -> List[str]:
+        """Predicate pushdown target for the scatter-gather planner.
 
-        The paper measures how reply size (hit-ratio) drives latency via
-        message packing; returning full rows reproduces that effect.
+        Evaluates ONE predicate against this shard and returns the matching
+        path set; the planner unions these across shards and intersects
+        across predicates centrally, so a file whose attribute rows are split
+        over shards (e.g. tagged on one DTN, extracted on another) still
+        matches conjunctions.
         """
-        paths = self.query(text)
+        pred = Predicate(attr=attr, op=op, value=value, attr_type=attr_type)
+        sql, params = pred.to_sql()
+        return [r[0] for r in self.shard.execute(sql, params)]
+
+    def scatter_query(self, predicates: List[Dict[str, Any]]) -> Dict[str, Any]:
+        """One-round-trip scatter target for the query planner.
+
+        Evaluates every predicate against this shard and returns the
+        per-predicate match lists plus the attribute rows of every locally
+        matched path, so the planner needs exactly one channel round-trip
+        per shard for a full query + gather.
+        """
+        matches = [self.query_predicate(**p) for p in predicates]
+        union = sorted({p for match in matches for p in match})
+        return {"matches": matches, "rows": self.get_attrs(union)}
+
+    def get_attrs(self, paths: List[str]) -> List[Dict[str, Any]]:
+        """Fetch full attribute rows for the given paths (gather phase)."""
         out: List[Dict[str, Any]] = []
         for path in paths:
             rows = self.shard.execute(
@@ -170,11 +230,21 @@ class DiscoveryService:
                 " FROM attributes WHERE path=?",
                 (path,),
             )
+            if not rows:
+                continue
             attrs = {}
             for name, t, vi, vr, vt in rows:
                 attrs[name] = vi if t == "int" else vr if t == "float" else vt
             out.append({"path": path, "attrs": attrs})
         return out
+
+    def query_with_values(self, text: str) -> List[Dict[str, Any]]:
+        """Query + return the matched files' full attribute rows (packed reply).
+
+        The paper measures how reply size (hit-ratio) drives latency via
+        message packing; returning full rows reproduces that effect.
+        """
+        return self.get_attrs(self.query(text))
 
     def stats(self) -> Dict[str, int]:
         (n_attr,) = self.shard.execute("SELECT COUNT(*) FROM attributes")[0]

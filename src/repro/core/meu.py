@@ -31,7 +31,7 @@ from typing import Callable, Dict, List, Optional
 from .backends import StorageBackend, SYNC_XATTR
 from .cluster import Collaboration, DataCenter
 from .metadata import hash_placement
-from .rpc import RpcClient
+from .plane import ServicePlane
 
 __all__ = ["MEU", "ExportReport"]
 
@@ -59,11 +59,11 @@ class MEU:
         self.dc = dc
         self.backend: StorageBackend = dc.backend
         self.collaborator = collaborator
-        # one metadata client per DTN, over the policy channel from this DC
-        self._meta: List[RpcClient] = [
-            RpcClient(dtn.metadata_server, collab.channel_policy(dc.dc_id, dtn.dc_id))
-            for dtn in collab.dtns
-        ]
+        # all service interaction rides the metadata plane: pooled per-DTN
+        # clients + concurrent bounded fan-out for the per-DTN commit batches.
+        # The MEU only writes, so its plane publishes invalidations without
+        # subscribing a cache of its own.
+        self.plane = ServicePlane(collab, dc.dc_id, subscribe=False)
 
     # -- scan phase ---------------------------------------------------------------
     def scan(self, root: str = "/", report: Optional[ExportReport] = None) -> List[Dict]:
@@ -126,7 +126,8 @@ class MEU:
         report.scan_seconds = time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        # group by owning DTN (global pathname hash), one batch RPC per DTN
+        # group by owning DTN (global pathname hash), one batch RPC per DTN;
+        # the plane fans the per-DTN commits out concurrently (bounded)
         n = len(self.collab.dtns)
         batches: Dict[int, List[Dict]] = {}
         for e in entries:
@@ -135,12 +136,17 @@ class MEU:
             e2["ns_id"] = self.collab.namespaces.resolve(e["path"]).ns_id
             e2["sync"] = 1
             batches.setdefault(hash_placement(e["path"], n), []).append(e2)
-        for dtn_idx, batch in batches.items():
-            client = self._meta[dtn_idx]
-            before = client.stats.bytes_sent
-            client.call("batch_upsert", entries=batch)
+        before = {i: self.plane.meta[i].stats.bytes_sent for i in batches}
+        self.plane.scatter(
+            "meta",
+            "batch_upsert",
+            per_dtn_kwargs={i: {"entries": batch} for i, batch in batches.items()},
+        )
+        for dtn_idx in batches:
             report.rpc_calls += 1
-            report.bytes_sent += client.stats.bytes_sent - before
+            report.bytes_sent += self.plane.meta[dtn_idx].stats.bytes_sent - before[dtn_idx]
+        # exported rows supersede anything other clients may have cached
+        self.plane.publish([e["path"] for e in entries])
         report.commit_seconds = time.perf_counter() - t1
 
         if mark_synced:
@@ -153,3 +159,6 @@ class MEU:
         report.exported_files = sum(1 for e in entries if not e["is_dir"])
         report.exported_dirs = sum(1 for e in entries if e["is_dir"])
         return report
+
+    def close(self) -> None:
+        self.plane.close()

@@ -1,0 +1,408 @@
+"""The unified metadata plane — client-side service interaction layer.
+
+Every SCISPACE client (workspace mount, MEU, benchmark harness) used to
+hand-roll its own per-DTN ``RpcClient`` loops, so the hot paths could neither
+pipeline nor cache nor bound their fan-out.  This module centralizes all of
+that behind one object per mount:
+
+- **pooled clients** — one metadata + one discovery :class:`~repro.core.rpc.RpcClient`
+  per DTN, built once over the collaboration's channel policy;
+- **batched / pipelined calls** — :meth:`ServicePlane.meta_batch` and friends
+  ride :meth:`RpcClient.call_batch`, so N ops on one channel pay one channel
+  round-trip plus N serializations (the MEU coalescing of §III-B3 applied to
+  every service surface);
+- **scatter-gather fan-out** — :meth:`ServicePlane.scatter` /
+  :meth:`ServicePlane.scatter_batch` contact many DTNs "concurrently" with a
+  bounded in-flight window.  Because the whole fabric is in-process, true
+  thread fan-out would serialize on the GIL and this container's ~0.5 ms
+  timer granularity; instead the calls run back-to-back with *deferred* wire
+  delays and the plane sleeps once per window for the slowest link — the
+  wall-clock a real concurrent fan-out pays (service CPU would serialize
+  under the GIL either way).  ``max_inflight`` bounds the window size;
+- **write-back attribute cache** — :class:`AttrCache` holds file metadata
+  entries keyed by path, invalidated collaboration-wide by *path hash*
+  through :class:`InvalidationBus` (the same hash that places the entry on
+  its owner DTN, §III-B1).  A plane's own writes update the cache in place;
+  other clients' writes reach it as invalidations, so reads never serve a
+  row another collaborator has replaced.  In write-back mode the final
+  "flush" op of the FUSE five-op sequence (the size/mtime update) is
+  buffered as a dirty cache entry and committed later as one batched
+  ``update`` per owner DTN (:meth:`ServicePlane.flush`).
+
+XUFS (arXiv:1001.0196) and the OSDF (arXiv:2605.15437) both show wide-area
+file federations live or die on exactly this request coalescing + namespace
+caching; this is the repo's version of that lesson.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .metadata import hash_placement, path_hash
+from .rpc import RpcClient, RpcError
+
+if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->plane cycle
+    from .cluster import Collaboration
+
+__all__ = ["AttrCache", "InvalidationBus", "ServicePlane"]
+
+#: Sentinel distinguishing "not cached" from a cached ``None``.
+_MISS = object()
+
+
+class InvalidationBus:
+    """Collaboration-wide pub/sub of metadata invalidations, keyed by path hash.
+
+    Every mutating client publishes the path hashes it touched; every other
+    subscribed cache drops matching entries.  The publisher's own cache is
+    excluded (``origin``) because it already holds the fresh entry — that is
+    what makes the cache write-back rather than read-only.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._caches: List["AttrCache"] = []
+        self.published = 0
+
+    def subscribe(self, cache: "AttrCache") -> None:
+        with self._lock:
+            if cache not in self._caches:
+                self._caches.append(cache)
+
+    def unsubscribe(self, cache: "AttrCache") -> None:
+        with self._lock:
+            if cache in self._caches:
+                self._caches.remove(cache)
+
+    def publish(self, hashes: Iterable[str], origin: Optional["AttrCache"] = None) -> None:
+        hashes = list(hashes)
+        if not hashes:
+            return
+        with self._lock:
+            targets = [c for c in self._caches if c is not origin]
+            self.published += len(hashes)
+        for cache in targets:
+            cache.invalidate_hashes(hashes)
+
+
+class AttrCache:
+    """LRU stat/attribute cache with path-hash-based invalidation.
+
+    Entries are whole metadata rows (the dict ``getattr`` returns).  The
+    secondary index maps ``path_hash`` → paths so an invalidation message —
+    which carries only hashes, never full pathnames — can evict precisely.
+    Dirty entries carry buffered ``update`` kwargs for write-back flushing.
+    """
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._lock = threading.RLock()
+        self._entries: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self._by_hash: Dict[str, set] = {}
+        self._dirty: Dict[str, Dict[str, Any]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, path: str) -> Any:
+        with self._lock:
+            entry = self._entries.get(path, _MISS)
+            if entry is _MISS:
+                self.misses += 1
+                return _MISS
+            self._entries.move_to_end(path)
+            self.hits += 1
+            return dict(entry)
+
+    @staticmethod
+    def is_miss(value: Any) -> bool:
+        return value is _MISS
+
+    def put(self, path: str, entry: Dict[str, Any]) -> None:
+        with self._lock:
+            self._entries[path] = dict(entry)
+            self._entries.move_to_end(path)
+            self._by_hash.setdefault(path_hash(path), set()).add(path)
+            while len(self._entries) > self.max_entries:
+                old_path, old_entry = self._entries.popitem(last=False)
+                if old_path in self._dirty:
+                    # never silently drop a buffered write — dirty entries pin
+                    # the cache above its cap until flushed
+                    self._entries[old_path] = old_entry
+                    break
+                self._unindex(old_path)
+
+    def _unindex(self, path: str) -> None:
+        bucket = self._by_hash.get(path_hash(path))
+        if bucket is not None:
+            bucket.discard(path)
+            if not bucket:
+                del self._by_hash[path_hash(path)]
+
+    def pop(self, path: str) -> None:
+        with self._lock:
+            if self._entries.pop(path, None) is not None:
+                self._unindex(path)
+            self._dirty.pop(path, None)
+
+    def invalidate_hashes(self, hashes: Iterable[str]) -> int:
+        """Drop every entry whose pathname hashes to one of ``hashes``.
+
+        Dirty entries are dropped too: a cross-client write to the same path
+        supersedes our buffered update, and replaying it would clobber the
+        newer row.
+        """
+        dropped = 0
+        with self._lock:
+            for h in hashes:
+                for path in list(self._by_hash.get(h, ())):
+                    self._entries.pop(path, None)
+                    self._dirty.pop(path, None)
+                    self._unindex(path)
+                    dropped += 1
+            self.invalidations += dropped
+        return dropped
+
+    # -- write-back bookkeeping ------------------------------------------------
+    def mark_dirty(self, path: str, **update_kwargs: Any) -> None:
+        with self._lock:
+            pending = self._dirty.setdefault(path, {})
+            pending.update(update_kwargs)
+            entry = self._entries.get(path)
+            if entry is not None:
+                entry.update({k: v for k, v in update_kwargs.items() if k in entry})
+
+    def dirty_paths(self) -> List[str]:
+        with self._lock:
+            return list(self._dirty)
+
+    def take_dirty(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            dirty, self._dirty = self._dirty, {}
+            return dirty
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "dirty": len(self._dirty),
+                "hits": self.hits,
+                "misses": self.misses,
+                "invalidations": self.invalidations,
+            }
+
+
+class ServicePlane:
+    """One client's gateway to every DTN's metadata + discovery service.
+
+    ``max_inflight`` bounds how many DTNs a scatter contacts concurrently —
+    the fan-out stays fixed as the collaboration grows, instead of spawning
+    one thread per DTN per op.
+    """
+
+    def __init__(
+        self,
+        collab: "Collaboration",
+        home_dc: str,
+        *,
+        max_inflight: int = 8,
+        cache_entries: int = 4096,
+        write_back: bool = False,
+        subscribe: bool = True,
+    ):
+        self.collab = collab
+        self.home_dc = home_dc
+        self.write_back = write_back
+        self.meta: List[RpcClient] = []
+        self.sds: List[RpcClient] = []
+        for dtn in collab.dtns:
+            ch = collab.channel_policy(home_dc, dtn.dc_id)
+            self.meta.append(RpcClient(dtn.metadata_server, ch))
+            self.sds.append(RpcClient(dtn.discovery_server, ch))
+        self.cache = AttrCache(cache_entries)
+        self._bus: Optional[InvalidationBus] = getattr(collab, "invalidations", None)
+        # write-only clients (MEU) publish invalidations but never read
+        # through their cache, so they skip the subscription — otherwise every
+        # throwaway exporter would pin a dead cache on the bus for the
+        # collaboration's lifetime.
+        if self._bus is not None and subscribe:
+            self._bus.subscribe(self.cache)
+        self.max_inflight = max(1, max_inflight)
+        self._closed = False
+
+    # -- placement ------------------------------------------------------------
+    def n_dtns(self) -> int:
+        return len(self.meta)
+
+    def owner(self, path: str) -> int:
+        return hash_placement(path, len(self.collab.dtns))
+
+    def _clients(self, service: str) -> List[RpcClient]:
+        if service == "meta":
+            return self.meta
+        if service == "sds":
+            return self.sds
+        raise ValueError(f"unknown service {service!r} (want 'meta' or 'sds')")
+
+    # -- single + batched calls ------------------------------------------------
+    def call(self, service: str, dtn_idx: int, method: str, **kwargs: Any) -> Any:
+        return self._clients(service)[dtn_idx].call(method, **kwargs)
+
+    def batch(
+        self,
+        service: str,
+        dtn_idx: int,
+        calls: Sequence[Tuple[str, Dict[str, Any]]],
+        *,
+        return_exceptions: bool = False,
+    ) -> List[Any]:
+        return self._clients(service)[dtn_idx].call_batch(
+            calls, return_exceptions=return_exceptions
+        )
+
+    def meta_call(self, dtn_idx: int, method: str, **kwargs: Any) -> Any:
+        return self.call("meta", dtn_idx, method, **kwargs)
+
+    def meta_batch(self, dtn_idx: int, calls, **kw) -> List[Any]:
+        return self.batch("meta", dtn_idx, calls, **kw)
+
+    def sds_call(self, dtn_idx: int, method: str, **kwargs: Any) -> Any:
+        return self.call("sds", dtn_idx, method, **kwargs)
+
+    def sds_batch(self, dtn_idx: int, calls, **kw) -> List[Any]:
+        return self.batch("sds", dtn_idx, calls, **kw)
+
+    # -- scatter-gather --------------------------------------------------------
+    def _pay_windows(self, delays: List[float]) -> None:
+        """Sleep the makespan of a bounded-concurrency fan-out.
+
+        Links inside one ``max_inflight`` window overlap (cost = the slowest
+        member); windows run back-to-back.  The serialization + service CPU
+        was already paid for real while the calls executed inline.
+        """
+        total = 0.0
+        for i in range(0, len(delays), self.max_inflight):
+            window = delays[i : i + self.max_inflight]
+            if window:
+                total += max(window)
+        if total > 0:
+            time.sleep(total)
+
+    def scatter(
+        self,
+        service: str,
+        method: str,
+        kwargs: Optional[Dict[str, Any]] = None,
+        *,
+        per_dtn_kwargs: Optional[Dict[int, Dict[str, Any]]] = None,
+    ) -> List[Any]:
+        """Fan one method out to DTNs with bounded concurrency; gather in order.
+
+        With ``kwargs`` every DTN receives the same arguments; with
+        ``per_dtn_kwargs`` only the listed DTNs are contacted and the result
+        list carries ``None`` in the skipped slots.
+        """
+        clients = self._clients(service)
+        if per_dtn_kwargs is None:
+            targets = {i: (kwargs or {}) for i in range(len(clients))}
+        else:
+            targets = per_dtn_kwargs
+        results: List[Any] = [None] * len(clients)
+        delays: List[float] = []
+        for i in sorted(targets):
+            results[i], wire = clients[i].call_deferred(method, **targets[i])
+            delays.append(wire)
+        self._pay_windows(delays)
+        return results
+
+    def scatter_batch(
+        self,
+        service: str,
+        calls_by_dtn: Dict[int, Sequence[Tuple[str, Dict[str, Any]]]],
+        *,
+        return_exceptions: bool = False,
+    ) -> Dict[int, List[Any]]:
+        """One batched round-trip per DTN, all DTN windows in flight at once."""
+        clients = self._clients(service)
+        out: Dict[int, List[Any]] = {}
+        delays: List[float] = []
+        for i in sorted(calls_by_dtn):
+            calls = calls_by_dtn[i]
+            if not calls:
+                continue
+            out[i], wire = clients[i].call_batch_deferred(
+                calls, return_exceptions=return_exceptions
+            )
+            delays.append(wire)
+        self._pay_windows(delays)
+        return out
+
+    # -- cached metadata surface ----------------------------------------------
+    def stat(self, path: str) -> Optional[Dict[str, Any]]:
+        """Cache-first getattr.  A hit is zero RPCs; a miss fills the cache."""
+        cached = self.cache.get(path)
+        if not AttrCache.is_miss(cached):
+            return cached
+        entry = self.meta_call(self.owner(path), "getattr", path=path)
+        if entry is not None:
+            self.cache.put(path, entry)
+        return entry
+
+    def note_entry(self, entry: Dict[str, Any]) -> None:
+        """Record a row this client just wrote; evict it everywhere else."""
+        path = entry["path"]
+        self.cache.put(path, entry)
+        self.publish([path])
+
+    def note_remove(self, path: str) -> None:
+        self.cache.pop(path)
+        self.publish([path])
+
+    def publish(self, paths: Iterable[str]) -> None:
+        if self._bus is not None:
+            self._bus.publish([path_hash(p) for p in paths], origin=self.cache)
+
+    # -- write-back ------------------------------------------------------------
+    def defer_update(self, path: str, **update_kwargs: Any) -> None:
+        """Buffer a metadata ``update`` (the five-op 'flush') for later commit."""
+        self.cache.mark_dirty(path, **update_kwargs)
+
+    def flush(self) -> int:
+        """Commit buffered updates: one batched ``update`` per owner DTN."""
+        dirty = self.cache.take_dirty()
+        if not dirty:
+            return 0
+        calls_by_dtn: Dict[int, List[Tuple[str, Dict[str, Any]]]] = {}
+        for path, kw in dirty.items():
+            calls_by_dtn.setdefault(self.owner(path), []).append(
+                ("update", dict(kw, path=path))
+            )
+        self.scatter_batch("meta", calls_by_dtn)
+        self.publish(list(dirty))
+        return len(dirty)
+
+    # -- accounting / lifecycle -------------------------------------------------
+    def rpc_stats(self) -> Dict[str, float]:
+        agg: Dict[str, float] = {}
+        for client in self.meta + self.sds:
+            for k, v in client.stats.snapshot().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.flush()
+        except RpcError:
+            pass  # best-effort: the services may already be gone at teardown
+        if self._bus is not None:
+            self._bus.unsubscribe(self.cache)

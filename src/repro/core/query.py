@@ -26,7 +26,7 @@ import re
 from dataclasses import dataclass
 from typing import Any, List, Sequence, Tuple, Union
 
-__all__ = ["Predicate", "Query", "parse_query", "QueryError"]
+__all__ = ["Predicate", "Query", "parse_query", "QueryError", "ScatterGatherPlan", "plan_query"]
 
 
 class QueryError(ValueError):
@@ -127,6 +127,58 @@ class Query:
             parts.append(sql)
             params.extend(p)
         return " INTERSECT ".join(parts), tuple(params)
+
+
+@dataclass(frozen=True)
+class ScatterGatherPlan:
+    """Distributed execution plan for one query over N discovery shards.
+
+    The sequential strategy this replaces ran the *whole conjunction* on each
+    shard and unioned the results — wrong whenever one file's attribute rows
+    are split across shards (a manual ``tag`` lands on the DTN owning the
+    path's global hash, while LW-offline extraction lands on a DTN chosen by
+    the hash over the home DC's DTNs), and serial in the number of shards.
+
+    The plan instead **pushes each predicate down** to every shard (all
+    predicates for one shard ride a single batched RPC) and **merges
+    centrally**: per predicate, union the per-shard path sets; then intersect
+    across predicates.  Set algebra makes the two-level merge exact:
+    ``∩_p (∪_s match(s, p))`` is the true global answer because a path
+    matches a predicate iff some shard holds a matching row for it.
+    """
+
+    query: Query
+
+    def predicate_messages(self) -> List[dict]:
+        """Codec-safe predicate descriptions for pushdown to each shard."""
+        return [
+            {"attr": p.attr, "op": p.op, "value": p.value, "attr_type": p.attr_type}
+            for p in self.query.predicates
+        ]
+
+    def shard_calls(self) -> List[Tuple[str, dict]]:
+        """The per-shard batched call list (one ``query_predicate`` per predicate)."""
+        return [("query_predicate", kw) for kw in self.predicate_messages()]
+
+    def merge(self, per_shard_results: Sequence[Sequence[Sequence[str]]]) -> List[str]:
+        """Central merge: union over shards per predicate, intersect predicates.
+
+        ``per_shard_results[s][p]`` is shard *s*'s path list for predicate *p*.
+        """
+        matched: set = set()
+        for p_idx in range(len(self.query.predicates)):
+            union: set = set()
+            for shard_result in per_shard_results:
+                union.update(shard_result[p_idx])
+            matched = union if p_idx == 0 else (matched & union)
+            if not matched:
+                return []
+        return sorted(matched)
+
+
+def plan_query(text: str) -> ScatterGatherPlan:
+    """Parse + plan a query for scatter-gather execution (raises QueryError)."""
+    return ScatterGatherPlan(parse_query(text))
 
 
 def parse_query(text: str) -> Query:

@@ -20,7 +20,7 @@ import struct
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "pack",
@@ -29,6 +29,8 @@ __all__ = [
     "RpcServer",
     "RpcClient",
     "RpcError",
+    "RpcFuture",
+    "RpcPipeline",
     "RpcStats",
 ]
 
@@ -155,10 +157,15 @@ class Channel:
     latency_s: float = 0.0
     gbps: float = float("inf")
 
-    def transmit(self, payload_len: int) -> None:
+    def delay_for(self, payload_len: int) -> float:
+        """The modeled one-way delay for a payload, without sleeping."""
         delay = self.latency_s
         if self.gbps != float("inf") and self.gbps > 0:
             delay += (payload_len * 8) / (self.gbps * 1e9)
+        return delay
+
+    def transmit(self, payload_len: int) -> None:
+        delay = self.delay_for(payload_len)
         if delay > 0:
             time.sleep(delay)
 
@@ -178,9 +185,16 @@ class RpcError(RuntimeError):
 
 @dataclass
 class RpcStats:
-    """Per-client running counters (used by benchmarks + EXPERIMENTS.md)."""
+    """Per-client running counters (used by benchmarks + EXPERIMENTS.md).
+
+    ``calls`` counts channel round-trips; ``ops`` counts service operations.
+    For a single :meth:`RpcClient.call` they advance together; a batched call
+    advances ``calls`` by one and ``ops`` by the batch size — the exact ratio
+    the metadata plane exists to improve.
+    """
 
     calls: int = 0
+    ops: int = 0
     bytes_sent: int = 0
     bytes_received: int = 0
     pack_seconds: float = 0.0
@@ -189,6 +203,7 @@ class RpcStats:
     def snapshot(self) -> Dict[str, float]:
         return {
             "calls": self.calls,
+            "ops": self.ops,
             "bytes_sent": self.bytes_sent,
             "bytes_received": self.bytes_received,
             "pack_seconds": self.pack_seconds,
@@ -206,18 +221,57 @@ class RpcServer:
 
     def handle(self, request: bytes) -> bytes:
         req = unpack(request)
+        if "batch" in req:
+            # One channel round-trip, N operations, executed strictly in list
+            # order on this server.  Each op gets its own ok/error slot so one
+            # failure neither aborts the batch nor masks later results.
+            return pack({"ok": True, "results": [self._dispatch(op) for op in req["batch"]]})
+        return pack(self._dispatch(req))
+
+    def _dispatch(self, req: Dict[str, Any]) -> Dict[str, Any]:
         method = req["method"]
         kwargs = req.get("kwargs") or {}
         if method.startswith("_"):
-            return pack({"ok": False, "error": f"no such method: {method}"})
+            return {"ok": False, "error": f"no such method: {method}"}
         fn: Optional[Callable] = getattr(self._service, method, None)
         if fn is None or not callable(fn):
-            return pack({"ok": False, "error": f"no such method: {method}"})
+            return {"ok": False, "error": f"no such method: {method}"}
         try:
-            result = fn(**kwargs)
-            return pack({"ok": True, "result": result})
+            return {"ok": True, "result": fn(**kwargs)}
         except Exception as exc:  # noqa: BLE001 - faithfully forwarded to client
-            return pack({"ok": False, "error": f"{type(exc).__name__}: {exc}"})
+            return {"ok": False, "error": f"{type(exc).__name__}: {exc}"}
+
+
+class RpcFuture:
+    """Result slot for one pipelined operation; resolved when its batch flushes."""
+
+    __slots__ = ("_result", "_error", "_done")
+
+    def __init__(self) -> None:
+        self._result: Any = None
+        self._error: Optional[RpcError] = None
+        self._done = False
+
+    def _resolve(self, reply: Dict[str, Any]) -> None:
+        if reply.get("ok"):
+            self._result = reply.get("result")
+        else:
+            self._error = RpcError(reply.get("error", "unknown remote error"))
+        self._done = True
+
+    def done(self) -> bool:
+        return self._done
+
+    def exception(self) -> Optional[RpcError]:
+        if not self._done:
+            raise RuntimeError("pipeline not flushed; result not available yet")
+        return self._error
+
+    def result(self) -> Any:
+        err = self.exception()
+        if err is not None:
+            raise err
+        return self._result
 
 
 class RpcClient:
@@ -228,23 +282,153 @@ class RpcClient:
         self.channel = channel
         self.stats = RpcStats()
 
-    def call(self, method: str, **kwargs: Any) -> Any:
+    def _round_trip(
+        self, message: Dict[str, Any], n_ops: int, defer_wire: bool = False
+    ) -> Tuple[Dict[str, Any], float]:
+        """Pack, cross the channel both ways, dispatch, unpack.
+
+        With ``defer_wire=True`` the channel delays are *computed and
+        returned* instead of slept — the plane's scatter-gather uses this to
+        model N links in flight at once: it issues the calls back-to-back and
+        sleeps once for the slowest window, the wall-clock a real concurrent
+        fan-out would pay (per-thread sub-ms sleeps neither overlap nor stay
+        accurate under this container's timer granularity + GIL).
+        """
         t0 = time.perf_counter()
-        request = pack({"method": method, "kwargs": kwargs})
+        request = pack(message)
         t1 = time.perf_counter()
-        self.channel.transmit(len(request))
-        response = self._server.handle(request)
-        self.channel.transmit(len(response))
+        if defer_wire:
+            wire = self.channel.delay_for(len(request))
+            response = self._server.handle(request)
+            wire += self.channel.delay_for(len(response))
+        else:
+            self.channel.transmit(len(request))
+            response = self._server.handle(request)
+            self.channel.transmit(len(response))
+            wire = time.perf_counter() - t1
         t2 = time.perf_counter()
         resp = unpack(response)
         t3 = time.perf_counter()
 
         self.stats.calls += 1
+        self.stats.ops += n_ops
         self.stats.bytes_sent += len(request)
         self.stats.bytes_received += len(response)
         self.stats.pack_seconds += (t1 - t0) + (t3 - t2)
-        self.stats.wire_seconds += t2 - t1
+        self.stats.wire_seconds += wire
+        return resp, (wire if defer_wire else 0.0)
 
+    def call(self, method: str, **kwargs: Any) -> Any:
+        resp, _ = self._round_trip({"method": method, "kwargs": kwargs}, n_ops=1)
         if not resp.get("ok"):
             raise RpcError(resp.get("error", "unknown remote error"))
         return resp.get("result")
+
+    def call_deferred(self, method: str, **kwargs: Any) -> Tuple[Any, float]:
+        """Like :meth:`call` but returns ``(result, modeled_wire_delay_s)``
+        without sleeping; the caller owns when/whether to pay the delay."""
+        resp, wire = self._round_trip(
+            {"method": method, "kwargs": kwargs}, n_ops=1, defer_wire=True
+        )
+        if not resp.get("ok"):
+            raise RpcError(resp.get("error", "unknown remote error"))
+        return resp.get("result"), wire
+
+    def call_batch(
+        self,
+        calls: Sequence[Tuple[str, Dict[str, Any]]],
+        *,
+        return_exceptions: bool = False,
+    ) -> List[Any]:
+        """N operations over one channel round-trip, executed in order.
+
+        Each op still pays its own serialization (the message carries every
+        request and every reply) but the channel latency is paid once — the
+        coalescing the paper's MEU applies to exports (§III-B3), generalized
+        to any service method.
+
+        With ``return_exceptions=False`` the first failed op raises
+        :class:`RpcError` (later ops have still executed server-side); with
+        ``True`` failed slots hold the :class:`RpcError` instance instead.
+        """
+        results, wire = self.call_batch_deferred(calls, return_exceptions=return_exceptions)
+        if wire > 0:
+            time.sleep(wire)
+        return results
+
+    def call_batch_deferred(
+        self,
+        calls: Sequence[Tuple[str, Dict[str, Any]]],
+        *,
+        return_exceptions: bool = False,
+    ) -> Tuple[List[Any], float]:
+        """:meth:`call_batch` with the wire delay returned instead of slept."""
+        if not calls:
+            return [], 0.0
+        message = {"batch": [{"method": m, "kwargs": kw} for m, kw in calls]}
+        resp, wire = self._round_trip(message, n_ops=len(calls), defer_wire=True)
+        if not resp.get("ok"):
+            raise RpcError(resp.get("error", "unknown remote error"))
+        replies = resp.get("results") or []
+        if len(replies) != len(calls):
+            raise RpcError(f"batch reply count {len(replies)} != request count {len(calls)}")
+        out: List[Any] = []
+        first_error: Optional[RpcError] = None
+        for reply in replies:
+            if reply.get("ok"):
+                out.append(reply.get("result"))
+            else:
+                err = RpcError(reply.get("error", "unknown remote error"))
+                if not return_exceptions and first_error is None:
+                    first_error = err
+                out.append(err)
+        if first_error is not None:
+            raise first_error
+        return out, wire
+
+    def pipeline(self) -> "RpcPipeline":
+        """Open a pipeline: queue ops now, pay one round-trip at flush."""
+        return RpcPipeline(self)
+
+
+class RpcPipeline:
+    """Pipelined calls on one client: futures resolve at :meth:`flush`.
+
+    Usable as a context manager; exiting the ``with`` block flushes.  Queued
+    operations execute in submission order on the remote service.
+    """
+
+    def __init__(self, client: RpcClient):
+        self._client = client
+        self._queued: List[Tuple[str, Dict[str, Any]]] = []
+        self._futures: List[RpcFuture] = []
+
+    def submit(self, method: str, **kwargs: Any) -> RpcFuture:
+        fut = RpcFuture()
+        self._queued.append((method, kwargs))
+        self._futures.append(fut)
+        return fut
+
+    def __len__(self) -> int:
+        return len(self._queued)
+
+    def flush(self) -> List[RpcFuture]:
+        """Send everything queued as one batch; resolve and return the futures."""
+        if not self._queued:
+            return []
+        calls, futures = self._queued, self._futures
+        self._queued, self._futures = [], []
+        replies = self._client.call_batch(calls, return_exceptions=True)
+        for fut, reply in zip(futures, replies):
+            if isinstance(reply, RpcError):
+                fut._resolve({"ok": False, "error": str(reply)})
+            else:
+                fut._resolve({"ok": True, "result": reply})
+        return futures
+
+    def __enter__(self) -> "RpcPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.flush()

@@ -9,11 +9,24 @@ mkdir) over every data center in the collaboration:
   metadata in that DTN's metadata shard;
 - **FUSE five-op sequence**: the paper measures that FUSE "invokes five
   operations serially: getattr, lookup, create, write and flush" (§IV-C).
-  The workspace write path issues the same sequence as explicit metadata
-  RPCs, so the sync-workspace vs native-access gap in our benchmarks has the
-  same structure as the paper's, not a hard-coded constant;
-- **ls** fans out to all DTNs in parallel and shows only entries with
-  ``sync=true`` that are visible under the requester's namespaces;
+  The workspace issues the same sequence as explicit metadata RPCs.  By
+  default (``pipeline=True``) the four metadata ops ride **one pipelined
+  batch** to the owner DTN — one channel round-trip, four serializations —
+  via the :class:`~repro.core.plane.ServicePlane`; ``pipeline=False`` keeps
+  the paper's serial per-op sequence for comparison (benchmarks/fig9d).
+  With ``write_back=True`` the final flush op is buffered in the plane's
+  write-back attribute cache and committed later as one batched ``update``
+  per DTN (:meth:`flush`), trading metadata visibility lag for another
+  round-trip off the write path;
+- **ls** scatter-gathers to all DTNs with bounded concurrency and shows only
+  entries with ``sync=true`` that are visible under the requester's
+  namespaces;
+- **stat** is served from the plane's attribute cache when possible; writes
+  by other collaborators evict entries via path-hash invalidation, so a hit
+  is never stale;
+- **search** runs the scatter-gather query planner: predicates are pushed
+  down to every discovery shard in one batched RPC per shard and the file
+  sets are merged centrally (§III-B5);
 - **SDS coupling**: scidata writes trigger attribute extraction according to
   the configured :class:`~repro.core.discovery.ExtractionMode`.
 
@@ -24,9 +37,6 @@ later export metadata with :class:`~repro.core.meu.MEU`.
 
 from __future__ import annotations
 
-import threading
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -34,7 +44,9 @@ import numpy as np
 from .backends import StorageBackend, SYNC_XATTR
 from .cluster import Collaboration, DataCenter, DTN
 from .discovery import ExtractionMode
-from .rpc import Channel, RpcClient
+from .plane import ServicePlane
+from .query import plan_query
+from .rpc import Channel
 from .scidata import (
     read_dataset,
     read_header,
@@ -63,6 +75,10 @@ class Workspace:
         *,
         extraction_mode: str = ExtractionMode.INLINE_ASYNC,
         attr_filter: Optional[List[str]] = None,
+        pipeline: bool = True,
+        write_back: bool = False,
+        max_inflight: int = 8,
+        cache_entries: int = 4096,
     ):
         if extraction_mode not in ExtractionMode.ALL:
             raise ValueError(f"unknown extraction mode {extraction_mode!r}")
@@ -71,29 +87,27 @@ class Workspace:
         self.home_dc = home_dc
         self.extraction_mode = extraction_mode
         self.attr_filter = attr_filter
-        # One metadata + one discovery client per DTN, over the policy channel.
-        self._meta: List[RpcClient] = []
-        self._sds: List[RpcClient] = []
-        for dtn in collab.dtns:
-            ch = collab.channel_policy(home_dc, dtn.dc_id)
-            self._meta.append(RpcClient(dtn.metadata_server, ch))
-            self._sds.append(RpcClient(dtn.discovery_server, ch))
+        self.pipeline = pipeline
+        self.write_back = write_back
+        # All service interaction goes through the metadata plane: pooled
+        # per-DTN clients, batched RPC, bounded scatter-gather, attr cache.
+        self.plane = ServicePlane(
+            collab,
+            home_dc,
+            max_inflight=max_inflight,
+            cache_entries=cache_entries,
+            write_back=write_back,
+        )
         self._data_channels: Dict[str, Channel] = {
             dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
         }
-        self._pool = ThreadPoolExecutor(max_workers=max(4, len(collab.dtns)))
 
     # -- internals ---------------------------------------------------------------
     def _owner(self, path: str) -> int:
-        from .metadata import hash_placement
-
-        return hash_placement(path, len(self.collab.dtns))
+        return self.plane.owner(path)
 
     def _dtn(self, path: str) -> DTN:
         return self.collab.dtns[self._owner(path)]
-
-    def _meta_client(self, path: str) -> RpcClient:
-        return self._meta[self._owner(path)]
 
     def _data_io(self, dc_id: str, nbytes: int) -> None:
         """Cross the data-plane link for a remote-DC read/write."""
@@ -108,12 +122,9 @@ class Workspace:
         """The five-op FUSE sequence + data-plane write + SDS coupling."""
         path = _norm(path)
         dtn = self._dtn(path)
-        md = self._meta_client(path)
+        owner_idx = self._owner(path)
         parent = path.rsplit("/", 1)[0] or "/"
-        md.call("getattr", path=parent)                     # 1 getattr
-        md.call("lookup", path=path)                        # 2 lookup
-        md.call(                                            # 3 create
-            "create",
+        create_kw = dict(
             path=path,
             owner=self.collaborator,
             dc_id=dtn.dc_id,
@@ -121,27 +132,61 @@ class Workspace:
             is_dir=False,
             sync=True,
         )
-        self._data_io(dtn.dc_id, len(data))                 # 4 write (data plane)
+        if self.pipeline:
+            calls = [
+                ("getattr", {"path": parent}),          # 1 getattr
+                ("lookup", {"path": path}),             # 2 lookup
+                ("create", create_kw),                  # 3 create
+            ]
+            if not self.write_back:
+                calls.append(                           # 5 flush (same batch)
+                    ("update", {"path": path, "size": len(data), "sync": True})
+                )
+            results = self.plane.meta_batch(owner_idx, calls)
+            entry = results[2]
+        else:
+            # the paper's serial sequence: one channel round-trip per op
+            self.plane.meta_call(owner_idx, "getattr", path=parent)     # 1
+            self.plane.meta_call(owner_idx, "lookup", path=path)        # 2
+            entry = self.plane.meta_call(owner_idx, "create", **create_kw)  # 3
+            if not self.write_back:
+                self.plane.meta_call(                                    # 5
+                    owner_idx, "update", path=path, size=len(data), sync=True
+                )
+        self._data_io(dtn.dc_id, len(data))             # 4 write (data plane)
         dtn.backend.write(path, data, owner=self.collaborator)
-        md.call("update", path=path, size=len(data), sync=True)  # 5 flush
+        entry["size"] = len(data)
+        self.plane.note_entry(entry)
+        if self.write_back:
+            # 5 flush — buffered as a dirty cache entry, committed in one
+            # batched update per DTN at the next flush()/barrier/close.
+            self.plane.defer_update(path, size=len(data), sync=True)
         dtn.backend.set_xattr(path, SYNC_XATTR, "true")
         self._index_hook(path, dtn, len(data))
         return len(data)
 
     def _index_hook(self, path: str, dtn: DTN, size: int) -> None:
-        sds = self._sds[dtn.dtn_id]
         if self.extraction_mode == ExtractionMode.INLINE_SYNC:
             # write completes only after extraction+indexing (§III-B5)
-            sds.call("extract_and_index", path=path, attr_filter=self.attr_filter, stat_size=size)
+            self.plane.sds_call(
+                dtn.dtn_id,
+                "extract_and_index",
+                path=path,
+                attr_filter=self.attr_filter,
+                stat_size=size,
+            )
         elif self.extraction_mode == ExtractionMode.INLINE_ASYNC:
             # a single registration message; indexing happens later
-            sds.call("enqueue_index", path=path, dc_id=dtn.dc_id)
+            self.plane.sds_call(dtn.dtn_id, "enqueue_index", path=path, dc_id=dtn.dc_id)
         # NONE / LW_OFFLINE: nothing in the write path
+
+    def flush(self) -> int:
+        """Commit write-back metadata updates (one batched RPC per DTN)."""
+        return self.plane.flush()
 
     def read(self, path: str) -> bytes:
         path = _norm(path)
-        md = self._meta_client(path)
-        entry = md.call("getattr", path=path)
+        entry = self.plane.stat(path)
         if entry is None:
             raise FileNotFoundError(path)
         dc = self.collab.dc(entry["dc_id"])
@@ -150,16 +195,20 @@ class Workspace:
         return data
 
     def stat(self, path: str) -> Optional[Dict[str, Any]]:
-        return self._meta_client(_norm(path)).call("getattr", path=_norm(path))
+        """Attribute lookup; a plane-cache hit costs zero RPCs."""
+        return self.plane.stat(_norm(path))
 
     def exists(self, path: str) -> bool:
-        return bool(self._meta_client(_norm(path)).call("lookup", path=_norm(path)))
+        path = _norm(path)
+        if not self.plane.cache.is_miss(self.plane.cache.get(path)):
+            return True
+        return bool(self.plane.meta_call(self._owner(path), "lookup", path=path))
 
     def mkdir(self, path: str) -> None:
         path = _norm(path)
         dtn = self._dtn(path)
-        md = self._meta_client(path)
-        md.call(
+        entry = self.plane.meta_call(
+            self._owner(path),
             "create",
             path=path,
             owner=self.collaborator,
@@ -169,29 +218,30 @@ class Workspace:
             sync=True,
         )
         dtn.backend.mkdir(path, owner=self.collaborator)
+        self.plane.note_entry(entry)
 
     def ls(self, path: str = "/") -> List[Dict[str, Any]]:
-        """Merge listings from every DTN in parallel (§III-B1)."""
+        """Scatter-gather listings from every DTN (§III-B1), bounded fan-out."""
         path = _norm(path)
-        futures = [
-            self._pool.submit(c.call, "list_dir", parent=path, requester=self.collaborator)
-            for c in self._meta
-        ]
+        self.plane.flush()  # write-back entries must be visible to listings
+        per_dtn = self.plane.scatter(
+            "meta", "list_dir", {"parent": path, "requester": self.collaborator}
+        )
         out: List[Dict[str, Any]] = []
-        for f in futures:
-            out.extend(f.result())
+        for entries in per_dtn:
+            out.extend(entries or [])
         return sorted(out, key=lambda e: e["path"])
 
     def find(self, prefix: str = "/") -> List[Dict[str, Any]]:
         """Recursive listing (global view of all shared datasets)."""
         prefix = _norm(prefix)
-        futures = [
-            self._pool.submit(c.call, "list_all", requester=self.collaborator, prefix=prefix)
-            for c in self._meta
-        ]
+        self.plane.flush()
+        per_dtn = self.plane.scatter(
+            "meta", "list_all", {"requester": self.collaborator, "prefix": prefix}
+        )
         out: List[Dict[str, Any]] = []
-        for f in futures:
-            out.extend(f.result())
+        for entries in per_dtn:
+            out.extend(entries or [])
         return sorted(out, key=lambda e: e["path"])
 
     def delete(self, path: str) -> None:
@@ -202,7 +252,8 @@ class Workspace:
             raise FileNotFoundError(path)
         if entry["owner"] != self.collaborator:
             raise PermissionError(f"{self.collaborator} does not own {path}")
-        self._meta_client(path).call("delete", path=path)
+        self.plane.meta_call(self._owner(path), "delete", path=path)
+        self.plane.note_remove(path)
         dc = self.collab.dc(entry["dc_id"])
         if dc.backend.exists(path):
             dc.backend.delete(path)
@@ -234,29 +285,43 @@ class Workspace:
         """Manual attribute tagging (§III-B5)."""
         path = _norm(path)
         dtn = self._dtn(path)
-        self._sds[dtn.dtn_id].call("tag", path=path, name=name, value=value)
+        self.plane.sds_call(dtn.dtn_id, "tag", path=path, name=name, value=value)
 
     def search(self, query: str) -> List[Dict[str, Any]]:
-        """Attribute query, fanned out to every discovery shard (§III-B5)."""
-        futures = [self._pool.submit(c.call, "query_with_values", text=query) for c in self._sds]
-        out: List[Dict[str, Any]] = []
-        for f in futures:
-            out.extend(f.result())
-        return sorted(out, key=lambda e: e["path"])
+        """Attribute query via the scatter-gather planner (§III-B5).
+
+        Each shard receives ONE RPC carrying every predicate and replies with
+        its per-predicate path sets plus the rows of its local matches; the
+        plane fans the shards out concurrently and the file sets are merged
+        centrally (union over shards, intersection over predicates) — correct
+        even when one file's rows span shards, in one round-trip per shard.
+        """
+        plan = plan_query(query)
+        per_dtn = self.plane.scatter(
+            "sds", "scatter_query", {"predicates": plan.predicate_messages()}
+        )
+        paths = set(plan.merge([r["matches"] for r in per_dtn]))
+        if not paths:
+            return []
+        merged: Dict[str, Dict[str, Any]] = {}
+        for reply in per_dtn:
+            for row in reply["rows"]:
+                if row["path"] in paths:
+                    merged.setdefault(row["path"], {}).update(row["attrs"])
+        return [{"path": p, "attrs": merged[p]} for p in sorted(merged)]
 
     def search_paths(self, query: str) -> List[str]:
         return [e["path"] for e in self.search(query)]
 
     # -- accounting -----------------------------------------------------------------
     def rpc_stats(self) -> Dict[str, float]:
-        agg: Dict[str, float] = {}
-        for c in self._meta + self._sds:
-            for k, v in c.stats.snapshot().items():
-                agg[k] = agg.get(k, 0) + v
-        return agg
+        return self.plane.rpc_stats()
+
+    def cache_stats(self) -> Dict[str, int]:
+        return self.plane.cache.stats()
 
     def close(self) -> None:
-        self._pool.shutdown(wait=False)
+        self.plane.close()
 
 
 class NativeSession:

@@ -118,8 +118,19 @@ def test_scidata_write_and_attrs(collab):
 
 def test_rpc_accounting(collab):
     ws = Workspace(collab, "alice", "dc0")
-    before = ws.rpc_stats().get("calls", 0)
+    before = ws.rpc_stats()
     ws.write("/acct/f.bin", b"abc")
-    after = ws.rpc_stats()["calls"]
+    after = ws.rpc_stats()
     # the five-op FUSE sequence: getattr, lookup, create, (data write), update
-    assert after - before >= 4
+    assert after["ops"] - before.get("ops", 0) >= 4
+    # ... pipelined into one metadata batch + one SDS registration
+    assert after["calls"] - before.get("calls", 0) <= 2
+
+
+def test_rpc_accounting_serial_path(collab):
+    ws = Workspace(collab, "alice", "dc0", pipeline=False)
+    before = ws.rpc_stats()
+    ws.write("/acct/g.bin", b"abc")
+    after = ws.rpc_stats()
+    # serial mode still pays one channel round-trip per metadata op
+    assert after["calls"] - before.get("calls", 0) >= 4

@@ -1,0 +1,306 @@
+"""Unified metadata plane: batched RPC, write-back attr cache, scatter-gather.
+
+Covers the plane-layer contracts the rest of the system now leans on:
+ordering + error propagation of batched/pipelined calls, path-hash cache
+invalidation on cross-client writes, and the invariant that the pipelined
+five-op write path leaves byte-identical metadata rows to the serial path.
+"""
+
+import pytest
+
+from repro.core import (
+    Collaboration,
+    NativeSession,
+    RpcClient,
+    RpcError,
+    ServicePlane,
+    Workspace,
+    hash_placement,
+    plan_query,
+)
+from repro.core.metadata import _FILE_COLS
+
+
+# -- batched RPC: ordering + error propagation ---------------------------------
+
+def test_call_batch_executes_in_order(collab):
+    """Ops in one batch run in list order: create -> update -> getattr."""
+    dtn = collab.dtns[0]
+    client = RpcClient(dtn.metadata_server)
+    results = client.call_batch(
+        [
+            ("create", dict(path="/b/x", owner="a", dc_id="dc0", ns_id=0)),
+            ("update", dict(path="/b/x", size=99)),
+            ("getattr", dict(path="/b/x")),
+        ]
+    )
+    assert results[0]["path"] == "/b/x"
+    assert results[1] is True
+    assert results[2]["size"] == 99  # the getattr observed the earlier update
+
+
+def test_call_batch_is_one_round_trip(collab):
+    client = RpcClient(collab.dtns[0].metadata_server)
+    client.call_batch([("lookup", {"path": f"/rt/{i}"}) for i in range(10)])
+    assert client.stats.calls == 1
+    assert client.stats.ops == 10
+
+
+def test_call_batch_error_propagation(collab):
+    client = RpcClient(collab.dtns[0].metadata_server)
+    calls = [
+        ("lookup", {"path": "/e/a"}),
+        ("no_such_method", {}),
+        ("create", dict(path="/e/b", owner="a", dc_id="dc0", ns_id=0)),
+    ]
+    with pytest.raises(RpcError, match="no such method"):
+        client.call_batch(calls)
+    # the failing op neither aborted the batch nor masked later ops
+    assert client.call("lookup", path="/e/b") is True
+    # return_exceptions surfaces per-slot errors instead of raising
+    results = client.call_batch(calls, return_exceptions=True)
+    assert results[0] is False and isinstance(results[1], RpcError)
+    assert results[2]["path"] == "/e/b"
+
+
+def test_pipeline_futures_resolve_on_flush(collab):
+    client = RpcClient(collab.dtns[0].metadata_server)
+    with client.pipeline() as p:
+        f_create = p.submit("create", path="/p/x", owner="a", dc_id="dc0", ns_id=0)
+        f_bad = p.submit("bogus_method")
+        f_get = p.submit("getattr", path="/p/x")
+        with pytest.raises(RuntimeError):
+            f_create.result()  # not flushed yet
+    assert f_create.result()["path"] == "/p/x"
+    assert isinstance(f_bad.exception(), RpcError)
+    assert f_get.result()["owner"] == "a"
+    assert client.stats.calls == 1  # the whole pipeline was one round-trip
+
+
+# -- five-op write: pipelined == serial -----------------------------------------
+
+def _dump_rows(collab):
+    """All files-table rows across every shard, timestamps masked."""
+    rows = []
+    for dtn in collab.dtns:
+        for row in dtn.metadata_shard.execute(
+            f"SELECT {','.join(_FILE_COLS)} FROM files ORDER BY path"
+        ):
+            entry = dict(zip(_FILE_COLS, row))
+            entry["ctime"] = entry["mtime"] = "<t>"
+            rows.append((dtn.dtn_id, tuple(entry.items())))
+    return rows
+
+
+def _fresh_collab():
+    c = Collaboration()
+    c.add_datacenter("dc0", n_dtns=2)
+    c.add_datacenter("dc1", n_dtns=2)
+    return c
+
+
+def test_pipelined_writes_match_serial_metadata_rows():
+    """Invariant: batched five-op writes leave byte-identical metadata rows
+    (modulo wall-clock timestamps) to the paper's serial sequence."""
+    paths = [f"/inv/d{i % 3}/f{i:03d}.bin" for i in range(24)]
+    snapshots = {}
+    for mode, kwargs in [("serial", dict(pipeline=False)), ("pipelined", dict(pipeline=True))]:
+        collab = _fresh_collab()
+        ws = Workspace(collab, "alice", "dc0", **kwargs)
+        for i, p in enumerate(paths):
+            ws.write(p, b"x" * (i + 1))
+        snapshots[mode] = _dump_rows(collab)
+        collab.close()
+    assert snapshots["serial"] == snapshots["pipelined"]
+
+
+def test_write_back_rows_match_after_flush():
+    collab_a, collab_b = _fresh_collab(), _fresh_collab()
+    ws_serial = Workspace(collab_a, "alice", "dc0", pipeline=False)
+    ws_wb = Workspace(collab_b, "alice", "dc0", write_back=True)
+    for i in range(8):
+        ws_serial.write(f"/wb/f{i}", b"y" * (i + 1))
+        ws_wb.write(f"/wb/f{i}", b"y" * (i + 1))
+    ws_wb.flush()
+    assert _dump_rows(collab_a) == _dump_rows(collab_b)
+    collab_a.close()
+    collab_b.close()
+
+
+def test_write_back_defers_then_commits(collab):
+    ws = Workspace(collab, "alice", "dc0", write_back=True)
+    viewer = Workspace(collab, "bob", "dc1")
+    ws.write("/defer/a.bin", b"0123456789")
+    # the writer's own cache already serves the final size (write-back hit)
+    assert ws.stat("/defer/a.bin")["size"] == 10
+    # the authoritative row still carries the create-time size until flush
+    assert viewer.stat("/defer/a.bin")["size"] == 0
+    flushed = ws.flush()
+    assert flushed == 1
+    # the flush invalidated the viewer's cached row too
+    assert viewer.stat("/defer/a.bin")["size"] == 10
+
+
+# -- cache invalidation on cross-client writes ----------------------------------
+
+def test_cross_client_write_invalidates_cache(collab):
+    alice = Workspace(collab, "alice", "dc0")
+    bob = Workspace(collab, "bob", "dc1")
+    alice.write("/inval/shared.bin", b"v1")
+    assert bob.stat("/inval/shared.bin")["size"] == 2  # now cached in bob's plane
+    assert not bob.plane.cache.is_miss(bob.plane.cache.get("/inval/shared.bin"))
+    alice.write("/inval/shared.bin", b"version-two")
+    # alice's write published the path hash -> bob's entry must be gone ...
+    assert bob.plane.cache.is_miss(bob.plane.cache.get("/inval/shared.bin"))
+    # ... and bob's next stat refetches the fresh row
+    assert bob.stat("/inval/shared.bin")["size"] == 11
+
+
+def test_stat_served_from_cache_without_rpc(collab):
+    ws = Workspace(collab, "alice", "dc0")
+    ws.write("/hit/a.bin", b"abc")
+    calls_before = ws.rpc_stats()["calls"]
+    for _ in range(10):
+        assert ws.stat("/hit/a.bin")["size"] == 3
+    assert ws.rpc_stats()["calls"] == calls_before  # pure cache hits
+    assert ws.cache_stats()["hits"] >= 10
+
+
+def test_meu_export_invalidates_other_planes(collab):
+    """MEU commits are cross-client writes too: cached rows must drop."""
+    from repro.core import MEU, SYNC_XATTR
+
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write("/meuinv/f.bin", b"old")
+    meu = MEU(collab, collab.dc("dc0"), "alice")
+    meu.export("/meuinv")
+    viewer = Workspace(collab, "bob", "dc1")
+    assert viewer.stat("/meuinv/f.bin")["size"] == 3  # cached in viewer's plane
+    # the file is modified natively and re-exported (dirty flag cleared)
+    native.write("/meuinv/f.bin", b"resized!")
+    backend = collab.dc("dc0").backend
+    backend.remove_xattr("/meuinv/f.bin", SYNC_XATTR)
+    backend.remove_xattr("/meuinv", SYNC_XATTR)
+    meu.export("/meuinv")
+    assert viewer.stat("/meuinv/f.bin")["size"] == 8
+
+
+def test_delete_drops_cache_everywhere(collab):
+    alice = Workspace(collab, "alice", "dc0")
+    bob = Workspace(collab, "bob", "dc1")
+    alice.write("/gone/x.bin", b"x")
+    assert bob.stat("/gone/x.bin") is not None
+    alice.delete("/gone/x.bin")
+    assert bob.stat("/gone/x.bin") is None
+    assert alice.stat("/gone/x.bin") is None
+
+
+# -- scatter-gather query planner ------------------------------------------------
+
+def test_planner_merges_rows_split_across_shards(collab):
+    """A file extracted on one shard and tagged on another must still match
+    a conjunction — the old per-shard full-query union missed these."""
+    import numpy as np
+
+    native = NativeSession(collab.dc("dc0"), "alice")
+    ws = Workspace(collab, "alice", "dc0")
+    split_path = None
+    for i in range(64):
+        p = f"/split/g{i}.sci"
+        local = hash_placement(p, len(collab.dc("dc0").dtns))  # extraction shard
+        global_ = hash_placement(p, len(collab.dtns))          # tag shard
+        if collab.dc("dc0").dtns[local].dtn_id != global_:
+            split_path = p
+            break
+    assert split_path is not None
+    native.write_scidata(split_path, {"x": np.zeros(2, np.float32)}, {"instrument": "modis"})
+    native.offline_index([split_path])
+    ws.tag(split_path, "quality", "gold")
+    # single predicates find it from either shard
+    assert ws.search_paths("instrument = modis") == [split_path]
+    assert ws.search_paths("quality = gold") == [split_path]
+    # the conjunction spans shards: only the central merge can satisfy it
+    assert ws.search_paths("instrument = modis and quality = gold") == [split_path]
+    # and the gathered attribute view merges both matching shards' rows
+    rows = ws.search("instrument = modis and quality = gold")
+    assert rows[0]["attrs"]["instrument"] == "modis"
+    assert rows[0]["attrs"]["quality"] == "gold"
+
+
+def test_planner_one_rpc_per_shard(collab):
+    import numpy as np
+
+    ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+    for i in range(6):
+        ws.write_scidata(
+            f"/q/f{i}.sci", {"x": np.zeros(2, np.float32)}, {"lvl": i, "grp": i % 2}
+        )
+    calls_before = ws.rpc_stats()["calls"]
+    hits = ws.search_paths("lvl >= 2 and grp = 0")
+    assert hits == [f"/q/f{i}.sci" for i in (2, 4)]
+    calls = ws.rpc_stats()["calls"] - calls_before
+    # the whole multi-predicate query + gather is one round-trip per shard
+    assert calls <= len(collab.dtns)
+
+
+def test_plan_merge_set_algebra():
+    plan = plan_query("a = 1 and b = 2")
+    # shard 0 matches predicate a for f1; shard 1 matches predicate b for f1
+    merged = plan.merge([[["/f1", "/f2"], []], [[], ["/f1"]]])
+    assert merged == ["/f1"]
+    assert plan.merge([[["/f2"], []], [[], []]]) == []
+
+
+# -- batched indexing -------------------------------------------------------------
+
+def test_batch_index_equals_per_file_indexing(collab):
+    import numpy as np
+
+    native = NativeSession(collab.dc("dc0"), "alice")
+    paths = []
+    for i in range(6):
+        p = f"/bi/f{i}.sci"
+        native.write_scidata(p, {"x": np.zeros(2, np.float32)}, {"idx": i})
+        paths.append(p)
+    d0, d1 = collab.dtns[0].discovery, collab.dtns[1].discovery
+    for p in paths:
+        d0.extract_and_index(p)
+    d1.batch_index(paths + paths)  # duplicates collapse: still idempotent
+    rows0 = d0.shard.execute(
+        "SELECT path, attr_name, attr_type, value_int, value_real, value_text"
+        " FROM attributes ORDER BY path, attr_name"
+    )
+    rows1 = d1.shard.execute(
+        "SELECT path, attr_name, attr_type, value_int, value_real, value_text"
+        " FROM attributes ORDER BY path, attr_name"
+    )
+    assert rows0 == rows1 and len(rows0) > 0
+
+
+def test_drain_pending_collapses_duplicates(collab):
+    import numpy as np
+
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write_scidata("/dup/a.sci", {"x": np.zeros(2, np.float32)}, {"k": 1})
+    svc = collab.dtns[0].discovery
+    for _ in range(3):
+        svc.enqueue_index("/dup/a.sci", "dc0")
+    assert svc.pending_count() == 3
+    drained = svc.drain_pending()
+    assert drained == 3 and svc.pending_count() == 0
+    rows = svc.shard.execute("SELECT COUNT(*) FROM attributes WHERE path=? AND attr_name=?",
+                             ("/dup/a.sci", "k"))
+    assert rows[0][0] == 1  # one extraction, no duplicate rows
+
+
+# -- plane scatter bounds ---------------------------------------------------------
+
+def test_scatter_bounded_concurrency_results_in_dtn_order(collab):
+    plane = ServicePlane(collab, "dc0", max_inflight=1)
+    ws = Workspace(collab, "alice", "dc0")
+    ws.write("/sb/a.bin", b"1")
+    per_dtn = plane.scatter("meta", "list_all", {"requester": "alice", "prefix": "/sb"})
+    assert len(per_dtn) == len(collab.dtns)
+    merged = sorted(e["path"] for entries in per_dtn for e in entries)
+    assert merged == ["/sb/a.bin"]
+    plane.close()

@@ -21,8 +21,20 @@ from repro.models.model import Model
 from repro.optim import AdamW, AdamWConfig
 from repro.train.step import init_state_abstract
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """Construct an AbstractMesh across jax API generations.
+
+    jax<=0.4.x takes a tuple of (name, size) pairs; newer releases take
+    (*axis_sizes, axis_names=...).
+    """
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except (TypeError, ValueError):
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
+SINGLE = _abstract_mesh((16, 16), ("data", "model"))
+MULTI = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, axis):
