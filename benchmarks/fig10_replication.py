@@ -1,0 +1,217 @@
+"""Fig. 10 — replicated metadata tier (this repo's extension).
+
+Three experiments over ESnet-class cross-DC links, 2 DCs x 4 DTNs (8 total):
+
+1. **replica-local reads** — a dc1 collaborator stats files whose metadata
+   origin is a dc0 DTN.  Origin reads pay the cross-DC round-trip per miss;
+   with the replication tier + ``prefer_replica`` the same stats are served
+   by a home-DC replica (intra-DC latency) under the session-consistency
+   bar.  Claim: >=2x at 8 DTNs.
+2. **convergence** — a mixed concurrent workload from both DCs (disjoint
+   writes, same-path update races, discovery extraction + tags), then a
+   quiesce: every DTN must hold byte-identical files AND attributes tables.
+3. **journal crash replay** — write-back mounts acknowledge after the
+   journal append; the mount is crashed before any flush and a successor
+   recovers the journal.  Claim: zero acknowledged updates lost.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import META_LAT, save_result, timed
+from repro.configs.scispace_testbed import TESTBED
+from repro.core import Collaboration, ExtractionMode, Workspace
+from repro.core.metadata import _FILE_COLS
+from repro.core.rpc import Channel
+
+N_FILES = 200
+N_DTNS = 8  # 2 DCs x 4
+CROSS_LAT = 2.5e-3  # one-way, ESnet-class (~5 ms RTT)
+
+
+def _collab(replicate: bool) -> Collaboration:
+    def channels(from_dc: str, to_dc: str) -> Channel:
+        if from_dc == to_dc:
+            return Channel(name="intra", latency_s=META_LAT)
+        return Channel(name="cross", latency_s=CROSS_LAT, gbps=100.0)
+
+    collab = Collaboration(channel_policy=channels)
+    for i in range(2):
+        collab.add_datacenter(f"dc{i}", n_dtns=N_DTNS // 2)
+    if replicate:
+        collab.start_replication(
+            max_pending=TESTBED.replication_max_pending,
+            max_age_s=min(0.01, TESTBED.replication_max_age_s),  # bench-fast drains
+            poll_s=0.005,
+        )
+    return collab
+
+
+def _replica_read_bench(n_files: int) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for mode, prefer in (("origin_s", False), ("replica_s", True)):
+        collab = _collab(replicate=True)
+        writer = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.NONE)
+        paths: List[str] = []
+        for i in range(n_files * 3):
+            p = f"/rr/f{i:05d}.bin"
+            # only paths whose origin is a dc0 DTN exercise the cross-DC read
+            if collab.dtns[writer.plane.owner(p)].dc_id == "dc0":
+                writer.write(p, b"x")
+                paths.append(p)
+            if len(paths) == n_files:
+                break
+        assert collab.quiesce_replication()
+        reader = Workspace(
+            collab, "bob", "dc1", extraction_mode=ExtractionMode.NONE,
+            prefer_replica=prefer,
+        )
+        # touch the origins once so the reader has witnessed their epochs —
+        # the session bar the replicas must then meet
+        for idx in range(len(collab.dtns)):
+            reader.plane.meta_call(idx, "stats")
+
+        def burst():
+            reader.plane.cache._entries.clear()  # every stat is a real miss
+            reader.plane.cache._by_hash.clear()
+            for p in paths:
+                assert reader.stat(p) is not None
+
+        out[mode] = timed(burst)
+        if prefer:
+            out["replica_hits"] = reader.plane.replica_hits
+            out["stale_fallbacks"] = reader.plane.replica_stale_fallbacks
+        collab.close()
+    return out
+
+
+def _convergence_bench(n_files: int) -> Dict:
+    collab = _collab(replicate=True)
+    alice = Workspace(collab, "alice", "dc0", extraction_mode=ExtractionMode.INLINE_SYNC)
+    bob = Workspace(collab, "bob", "dc1", extraction_mode=ExtractionMode.INLINE_SYNC)
+    arrays = {"x": np.zeros(4, np.float32)}
+    for i in range(n_files):
+        alice.write_scidata(f"/mix/a{i:04d}.sci", arrays, {"src": "dc0", "i": i})
+        bob.write_scidata(f"/mix/b{i:04d}.sci", arrays, {"src": "dc1", "i": i})
+        if i % 3 == 0:  # same-path update races across DCs
+            alice.write(f"/mix/shared{i % 7}.bin", b"a" * (i + 1))
+            bob.write(f"/mix/shared{i % 7}.bin", b"b" * (i + 2))
+    bob.tag("/mix/a0000.sci", "quality", "gold")  # rows split across origins
+    t_quiesce = timed(lambda: collab.quiesce_replication(timeout_s=30.0))
+
+    files_tables = [
+        dtn.metadata_shard.execute(
+            f"SELECT {','.join(_FILE_COLS)} FROM files ORDER BY path, origin, epoch"
+        )
+        for dtn in collab.dtns
+    ]
+    attr_tables = [
+        dtn.discovery_shard.execute(
+            "SELECT path, attr_name, attr_type, value_int, value_real, value_text,"
+            " origin, epoch FROM attributes ORDER BY path, origin, attr_name, epoch"
+        )
+        for dtn in collab.dtns
+    ]
+    files_identical = all(t == files_tables[0] for t in files_tables)
+    attrs_identical = all(t == attr_tables[0] for t in attr_tables)
+    shipped = sum(
+        dtn.replica_pump.records_shipped for dtn in collab.dtns if dtn.replica_pump
+    )
+    collab.close()
+    return {
+        "files_rows_per_dtn": len(files_tables[0]),
+        "attr_rows_per_dtn": len(attr_tables[0]),
+        "files_identical": files_identical,
+        "attrs_identical": attrs_identical,
+        "records_shipped": shipped,
+        "quiesce_s": t_quiesce,
+    }
+
+
+def _journal_bench(n_files: int) -> Dict:
+    collab = _collab(replicate=False)
+    tmp = tempfile.mkdtemp(prefix="scispace-journal-")
+    jp = os.path.join(tmp, "wb.journal")
+    w = Workspace(
+        collab, "dave", "dc0", extraction_mode=ExtractionMode.NONE,
+        write_back=True, journal_path=jp,
+        wb_max_pending=10 * n_files, wb_max_age_s=9e9,  # no auto-flush
+    )
+    acknowledged = []
+    for i in range(n_files):
+        p = f"/j/f{i:04d}.bin"
+        w.write(p, b"y" * (i + 1))
+        acknowledged.append((p, i + 1))
+    w.crash()  # dies with every update still buffered
+
+    w2 = Workspace(
+        collab, "dave", "dc0", extraction_mode=ExtractionMode.NONE,
+        write_back=True, journal_path=jp,
+    )
+    replayed = w2.flush()
+    viewer = Workspace(collab, "eve", "dc1", extraction_mode=ExtractionMode.NONE)
+    lost = sum(1 for p, size in acknowledged if viewer.stat(p)["size"] != size)
+    w2.close()
+    viewer.close()
+    collab.close()
+    os.unlink(jp)
+    os.rmdir(tmp)
+    return {"acknowledged": len(acknowledged), "replayed": replayed, "lost": lost}
+
+
+def run(quick: bool = False) -> Dict:
+    n_files = N_FILES // 5 if quick else N_FILES
+    reads = _replica_read_bench(n_files)
+    conv = _convergence_bench(max(20, n_files // 4))
+    journal = _journal_bench(max(16, n_files // 4))
+    out: Dict = {
+        "n_dtns": N_DTNS,
+        "n_files": n_files,
+        "reads": reads,
+        "read_speedup_replica": reads["origin_s"] / reads["replica_s"],
+        "convergence": conv,
+        "journal": journal,
+        "claims": {
+            "replica_reads_2x": reads["origin_s"] / reads["replica_s"] >= 2.0,
+            "replicas_converge": conv["files_identical"] and conv["attrs_identical"],
+            "journal_zero_loss": journal["lost"] == 0,
+        },
+    }
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    res = run(quick)
+    r = res["reads"]
+    print(f"fig10 replication tier ({res['n_files']} cross-DC stats, {res['n_dtns']} DTNs):")
+    print(
+        f"  origin reads {r['origin_s']:.3f}s  replica reads {r['replica_s']:.3f}s "
+        f"(x{res['read_speedup_replica']:.1f}; hits {r.get('replica_hits')}, "
+        f"stale fallbacks {r.get('stale_fallbacks')})"
+    )
+    c = res["convergence"]
+    print(
+        f"  convergence: files identical={c['files_identical']} "
+        f"attrs identical={c['attrs_identical']} "
+        f"({c['files_rows_per_dtn']} file rows/DTN, {c['records_shipped']} records shipped, "
+        f"quiesce {c['quiesce_s']:.3f}s)"
+    )
+    j = res["journal"]
+    print(
+        f"  journal replay: {j['acknowledged']} acknowledged, {j['replayed']} replayed, "
+        f"{j['lost']} lost"
+    )
+    print(f"  claims: {res['claims']}")
+    save_result("fig10_replication", res)
+    if not all(res["claims"].values()):
+        raise AssertionError(f"replication claims failed: {res['claims']}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -23,13 +23,18 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import META_LAT, make_collab, save_result, timed
+from repro.configs.scispace_testbed import TESTBED
 from repro.core import Collaboration, ExtractionMode, Workspace
 from repro.core.rpc import Channel
 
 N_FILES = 300
 N_QUERY_FILES = 120
 N_QUERIES = 10
-DTN_COUNTS = [2, 4, 8]  # total DTNs over the two DCs
+#: total DTNs over the two DCs; 16/32 prove the planner scales past the
+#: paper testbed's 8 (the tree-merge keeps the central fold group-sized)
+DTN_COUNTS = [2, 4, 8, 16, 32]
+QUICK_DTN_COUNTS = [2, 4, 8]
+MERGE_GROUP = TESTBED.query_merge_group
 QUERY = "location = pacific and daynight = 1"
 #: cross-DC one-way latency for the query sweep.  Unlike the scaled-down
 #: CROSS_DC_LAT in common.py this is ESnet-class (paper §IV-B, ~5ms RTT), so
@@ -55,7 +60,15 @@ def _write_bench(n_files: int) -> Dict[str, float]:
     for mode, kwargs in [
         ("serial_s", dict(pipeline=False)),
         ("pipelined_s", dict(pipeline=True)),
-        ("write_back_s", dict(pipeline=True, write_back=True)),
+        (
+            "write_back_s",
+            dict(
+                pipeline=True,
+                write_back=True,
+                wb_max_pending=TESTBED.wb_max_pending,
+                wb_max_age_s=TESTBED.wb_max_age_s,
+            ),
+        ),
     ]:
         collab = make_collab(store_gbps=0.0, store_lat_s=0.0)
         ws = Workspace(
@@ -98,14 +111,41 @@ def _query_bench(n_dtns: int, n_files: int, n_queries: int) -> Dict[str, float]:
     assert sequential() == scatter() != []
     t_seq = timed(lambda: [sequential() for _ in range(n_queries)])
     t_sg = timed(lambda: [scatter() for _ in range(n_queries)])
+
+    # -- central merge topology: flat N-way union vs fixed-group tree-merge.
+    # Same answer (union is associative); the tree bounds every fold at
+    # MERGE_GROUP partials, the property that lets the merge step distribute.
+    from repro.core.query import plan_query as _plan
+
+    plan = _plan(QUERY)
+    per_dtn = ws.plane.scatter(
+        "sds", "scatter_query", {"predicates": plan.predicate_messages()}
+    )
+    shard_matches = [r["matches"] for r in per_dtn]
+    flat = plan.merge(shard_matches, group_size=max(n_dtns, 2))
+    tree = plan.merge(shard_matches, group_size=MERGE_GROUP)
+    assert flat == tree != []
+    reps = 200
+    t_flat = timed(
+        lambda: [plan.merge(shard_matches, group_size=max(n_dtns, 2)) for _ in range(reps)]
+    )
+    t_tree = timed(
+        lambda: [plan.merge(shard_matches, group_size=MERGE_GROUP) for _ in range(reps)]
+    )
     collab.close()
-    return {"sequential_s": t_seq, "scatter_gather_s": t_sg}
+    return {
+        "sequential_s": t_seq,
+        "scatter_gather_s": t_sg,
+        "merge_flat_s": t_flat / reps,
+        "merge_tree_s": t_tree / reps,
+    }
 
 
 def run(quick: bool = False) -> Dict:
     n_files = N_FILES // 5 if quick else N_FILES
     n_qfiles = N_QUERY_FILES // 4 if quick else N_QUERY_FILES
     n_queries = N_QUERIES // 3 if quick else N_QUERIES
+    dtn_counts = QUICK_DTN_COUNTS if quick else DTN_COUNTS
 
     writes = _write_bench(n_files)
     out: Dict = {
@@ -113,10 +153,11 @@ def run(quick: bool = False) -> Dict:
         "write": writes,
         "write_speedup_pipelined": writes["serial_s"] / writes["pipelined_s"],
         "write_speedup_write_back": writes["serial_s"] / writes["write_back_s"],
-        "dtn_counts": DTN_COUNTS,
+        "dtn_counts": dtn_counts,
+        "merge_group": MERGE_GROUP,
         "query": [],
     }
-    for n_dtns in DTN_COUNTS:
+    for n_dtns in dtn_counts:
         q = _query_bench(n_dtns, n_qfiles, n_queries)
         q["n_dtns"] = n_dtns
         q["speedup"] = q["sequential_s"] / q["scatter_gather_s"]
@@ -137,11 +178,15 @@ def main(quick: bool = False) -> Dict:
         f"(x{res['write_speedup_pipelined']:.1f})  write-back {w['write_back_s']:.3f}s "
         f"(x{res['write_speedup_write_back']:.1f})"
     )
-    print(f"  {'DTNs':>5s} {'sequential':>11s} {'scatter-gather':>15s} {'speedup':>8s}")
+    print(
+        f"  {'DTNs':>5s} {'sequential':>11s} {'scatter-gather':>15s} {'speedup':>8s}"
+        f" {'merge flat':>11s} {'merge tree':>11s}"
+    )
     for q in res["query"]:
         print(
             f"  {q['n_dtns']:5d} {q['sequential_s']:11.3f} "
             f"{q['scatter_gather_s']:15.3f} {q['speedup']:7.1f}x"
+            f" {q['merge_flat_s']*1e6:9.1f}us {q['merge_tree_s']*1e6:9.1f}us"
         )
     save_result("fig9d_plane", res)
     return res

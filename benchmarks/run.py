@@ -7,6 +7,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   fig9a  MEU export                fig9b  extraction modes
   tab2   query latency/hit-ratio   fig9c  end-to-end analysis
   fig9d  metadata plane: pipelined five-op writes + scatter-gather query
+  fig10  replicated metadata tier: replica reads, convergence, journal replay
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -29,6 +30,7 @@ from benchmarks import (
     fig9b_extraction,
     fig9c_end2end,
     fig9d_plane,
+    fig10_replication,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -60,6 +62,7 @@ def main(argv=None) -> int:
         ("tab2_query", tab2_query.main),
         ("fig9c_end2end", fig9c_end2end.main),
         ("fig9d_plane", fig9d_plane.main),
+        ("fig10_replication", fig10_replication.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

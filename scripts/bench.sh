@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Plane + replication benchmark gate.
+#
+#   scripts/bench.sh            # quick sweeps (CI-sized)
+#   FULL=1 scripts/bench.sh     # full sweeps (incl. 16/32-DTN planner scaling)
+#
+# Runs the fig9d metadata-plane benchmark and the fig10 replication-tier
+# benchmark, writes results/fig9d_plane.json + results/fig10_replication.json,
+# and exits non-zero when a benchmark errors or a fig10 claim (replica reads
+# >=2x, replica convergence, zero journal loss) fails — fig10's main() raises
+# on failed claims.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHON="${PYTHON:-python}"
+QUICK="True"
+if [ -n "${FULL:-}" ]; then
+    QUICK="False"
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" - <<EOF
+from benchmarks import fig9d_plane, fig10_replication
+
+fig9d = fig9d_plane.main(quick=$QUICK)
+assert fig9d["write_speedup_pipelined"] >= 2.0, fig9d["write_speedup_pipelined"]
+print()
+fig10_replication.main(quick=$QUICK)  # raises if any claim fails
+EOF
+
+echo
+echo "bench: OK (results/fig9d_plane.json, results/fig10_replication.json)"

@@ -1,0 +1,112 @@
+"""jax version compatibility shims.
+
+The repo targets the mesh-context and cost-analysis surfaces that moved
+between jax releases; the container pins jax 0.4.37.  Two seams matter:
+
+- ``jax.set_mesh(mesh)`` (newer jax) vs the ``Mesh`` object's own context
+  manager (0.4.x): both install the ambient mesh that ``jit``/``shard_map``
+  resolve named axes against.  :func:`set_mesh` returns whichever context
+  manager this jax provides.
+- ``Compiled.cost_analysis()`` returns a flat dict on newer jax but a
+  one-element list of dicts on 0.4.x.  :func:`cost_analysis_dict`
+  normalizes to the dict (empty when XLA reports nothing).
+- ``jax.shard_map`` (keyword ``axis_names``/``check_vma``) vs
+  ``jax.experimental.shard_map.shard_map`` (``auto``/``check_rep``):
+  :func:`shard_map` accepts the new keywords and translates.  On 0.4.x the
+  vma (varying-manual-axes) type system does not exist, so
+  :func:`pcast_varying` degrades to identity and replication checking is
+  disabled for partial-manual regions.
+
+Keep every jax-version branch in this module — call sites should never
+probe ``jax`` themselves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, ContextManager, Dict, Optional, Set
+
+import jax
+
+__all__ = [
+    "set_mesh",
+    "cost_analysis_dict",
+    "shard_map",
+    "pcast_varying",
+    "HAS_VMA_SHARD_MAP",
+]
+
+#: True on jax with first-class ``jax.shard_map`` + vma typing.  On 0.4.x the
+#: experimental shard_map exists but its SPMD partitioner aborts (C++ check
+#: ``sharding.IsManualSubgroup()``) whenever autodiff emits a while loop
+#: inside a partial-manual region — any grad-of-scan or grad-inside-scan.
+#: Code paths that differentiate scans under partial-manual must branch on
+#: this and keep the manual region scan-free on old jax.
+HAS_VMA_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def set_mesh(mesh) -> ContextManager:
+    """Context manager installing ``mesh`` as the ambient device mesh."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    # pre-0.5 jax: Mesh is itself the context manager
+    return mesh
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Set[str]] = None,
+    check_vma: bool = True,
+):
+    """New-style ``jax.shard_map`` call shape on any supported jax.
+
+    ``axis_names`` lists the mesh axes the region is manual over (all axes
+    when None).  On 0.4.x the complement is passed as ``auto`` and
+    ``check_rep`` is forced off for partial-manual regions — the old
+    replication checker predates vma typing and rejects valid programs the
+    new checker accepts.
+    """
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        kwargs: Dict[str, Any] = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        kwargs["check_vma"] = check_vma
+        return new_sm(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as old_sm
+
+    manual = set(axis_names) if axis_names is not None else set(mesh.axis_names)
+    auto = frozenset(set(mesh.axis_names) - manual)
+    # pre-vma jax: the old rep checker needs pbroadcasts that pcast_varying
+    # can no longer insert, so it must stay off regardless of check_vma
+    return old_sm(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        auto=auto,
+        check_rep=False,
+    )
+
+
+def pcast_varying(x, axes):
+    """``lax.pcast(x, axes, to="varying")`` where vma typing exists; else x."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        return pcast(x, axes, to="varying")
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is not None:
+        return pvary(x, axes)
+    return x

@@ -11,6 +11,13 @@ simulated channels (DESIGN.md §2, §8).
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from repro.core.replication import (
+    PUMP_MAX_AGE_S,
+    PUMP_MAX_PENDING,
+    WB_MAX_AGE_S,
+    WB_MAX_PENDING,
+)
+
 __all__ = ["TESTBED"]
 
 
@@ -27,6 +34,20 @@ class TestbedConfig:
     block_sizes: Tuple[int, ...] = (4 << 10, 16 << 10, 64 << 10, 256 << 10, 512 << 10)
     attr_counts: Tuple[int, ...] = (5, 20)
     hit_ratios: Tuple[float, ...] = (0.0, 0.25, 0.5, 0.75, 1.0)
+    # write-back flush thresholds (the AsyncIndexer-style count/age pair for
+    # the plane's crash-recoverable WriteBackJournal).  Defaults come from
+    # core/replication.py so the two never drift; benchmarks pass TESTBED
+    # values through Workspace(wb_max_pending=..., wb_max_age_s=...)
+    wb_max_pending: int = WB_MAX_PENDING
+    wb_max_age_s: float = WB_MAX_AGE_S
+    # replication-tier lag bounds: a ReplicaPump drains its DTN's log when
+    # either fires, so replicas trail origins by at most this much
+    # (Collaboration.start_replication(max_pending=..., max_age_s=...))
+    replication_max_pending: int = PUMP_MAX_PENDING
+    replication_max_age_s: float = PUMP_MAX_AGE_S
+    # planner merge fan-in: the scatter-gather tree-merge folds at most this
+    # many per-shard partial results per level (scaling past 8 DTNs)
+    query_merge_group: int = 8
 
 
 TESTBED = TestbedConfig()

@@ -18,6 +18,10 @@ Layers (bottom-up):
   client (workspace, MEU, benchmarks) talks to services through it.
 - :mod:`repro.core.workspace`  — the scifs client (unified namespace) + native access
 - :mod:`repro.core.meu`        — Metadata Export Utility (local-write export protocol)
+- :mod:`repro.core.replication` — the **replicated metadata tier**: per-DTN
+  epoch clocks + append-only replication logs, async ReplicaPumps shipping
+  mutations to peer DTNs (bounded lag, (epoch, origin) last-writer-wins),
+  and the crash-recoverable write-back journal.
 """
 
 from .backends import MemoryBackend, PosixBackend, StorageBackend, SYNC_XATTR
@@ -28,6 +32,12 @@ from .meu import MEU, ExportReport
 from .namespace import DEFAULT_NS, Namespace, NamespaceRegistry
 from .plane import AttrCache, InvalidationBus, ServicePlane
 from .query import Query, QueryError, ScatterGatherPlan, parse_query, plan_query
+from .replication import (
+    EpochClock,
+    ReplicaPump,
+    ReplicationLog,
+    WriteBackJournal,
+)
 from .rpc import Channel, RpcClient, RpcError, RpcFuture, RpcPipeline, RpcServer, pack, unpack
 from .scidata import (
     SciFile,
@@ -63,6 +73,10 @@ __all__ = [
     "AttrCache",
     "InvalidationBus",
     "ServicePlane",
+    "EpochClock",
+    "ReplicaPump",
+    "ReplicationLog",
+    "WriteBackJournal",
     "Query",
     "QueryError",
     "ScatterGatherPlan",

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -22,13 +23,21 @@ from .discovery import AsyncIndexer, DiscoveryService
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement
 from .namespace import NamespaceRegistry
 from .plane import InvalidationBus
+from .replication import AppliedMap, EpochClock, ReplicaPump, ReplicationLog
 from .rpc import Channel, RpcServer
 
 __all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy"]
 
 
 class DTN:
-    """A data transfer node: PFS client + one metadata shard + one discovery shard."""
+    """A data transfer node: PFS client + one metadata shard + one discovery shard.
+
+    Each DTN carries one Lamport :class:`EpochClock` (shared by both services
+    and stamped on every RPC envelope) and one append-only
+    :class:`ReplicationLog` that both services feed; a :class:`ReplicaPump`
+    (started by :meth:`Collaboration.start_replication`) drains the log to
+    every peer DTN asynchronously.
+    """
 
     def __init__(self, dtn_id: int, dc_id: str, backend: StorageBackend, db_dir: Optional[str]):
         self.dtn_id = dtn_id
@@ -39,23 +48,68 @@ class DTN:
         else:
             meta_db = os.path.join(db_dir, f"dtn{dtn_id}_meta.db")
             disc_db = os.path.join(db_dir, f"dtn{dtn_id}_disc.db")
+        self.clock = EpochClock()
+        self.replication_log = ReplicationLog()
+        self.applied = AppliedMap()
+        self.mutation_lock = threading.RLock()
         self.metadata_shard = MetadataShard(meta_db)
         self.discovery_shard = DiscoveryShard(disc_db)
-        self.metadata = MetadataService(self.metadata_shard, dtn_id=dtn_id, dc_id=dc_id)
-        self.discovery = DiscoveryService(self.discovery_shard, dtn_id=dtn_id, backend=backend)
-        self.metadata_server = RpcServer(self.metadata, name=f"meta@dtn{dtn_id}")
-        self.discovery_server = RpcServer(self.discovery, name=f"sds@dtn{dtn_id}")
+        self.metadata = MetadataService(
+            self.metadata_shard, dtn_id=dtn_id, dc_id=dc_id,
+            clock=self.clock, log=self.replication_log, applied=self.applied,
+            mutation_lock=self.mutation_lock,
+        )
+        self.discovery = DiscoveryService(
+            self.discovery_shard, dtn_id=dtn_id, backend=backend,
+            clock=self.clock, log=self.replication_log, applied=self.applied,
+            mutation_lock=self.mutation_lock,
+        )
+        self.metadata_server = RpcServer(self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock)
+        self.discovery_server = RpcServer(self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock)
         self.async_indexer: Optional[AsyncIndexer] = None
+        self.replica_pump: Optional[ReplicaPump] = None
+        self._indexer_kwargs: Optional[dict] = None
 
     def start_async_indexer(self, **kwargs) -> AsyncIndexer:
         if self.async_indexer is None:
+            self._indexer_kwargs = dict(kwargs)
             self.async_indexer = AsyncIndexer(self.discovery, **kwargs).start()
         return self.async_indexer
+
+    @property
+    def down(self) -> bool:
+        return self.metadata_server.down
+
+    def crash(self) -> None:
+        """Simulate a DTN crash/partition: both services become unreachable
+        and the background workers die without draining.  Shard state is the
+        durable half (SQLite); in-flight queues and pump cursors survive in
+        this in-process simulation the way an fsync'd store would."""
+        self.metadata_server.down = True
+        self.discovery_server.down = True
+        if self.async_indexer is not None:
+            self.async_indexer.stop(drain=False)
+            self.async_indexer = None
+        if self.replica_pump is not None:
+            self.replica_pump.stop(drain=False)
+
+    def restart(self) -> None:
+        """Bring a crashed DTN back.  Peers' pumps still hold their cursors,
+        so every record this DTN missed while down is re-shipped by the
+        normal drain path — recovery needs no special-case protocol."""
+        self.metadata_server.down = False
+        self.discovery_server.down = False
+        if self.async_indexer is None and self._indexer_kwargs is not None:
+            self.async_indexer = AsyncIndexer(self.discovery, **self._indexer_kwargs).start()
+        if self.replica_pump is not None:
+            self.replica_pump.start()
 
     def stop(self) -> None:
         if self.async_indexer is not None:
             self.async_indexer.stop()
             self.async_indexer = None
+        if self.replica_pump is not None:
+            self.replica_pump.stop()
 
     def close(self) -> None:
         self.stop()
@@ -161,11 +215,63 @@ class Collaboration:
             dtn.metadata.put_namespace(ns.ns_id, ns.name, ns.scope, ns.owner, ns.prefix)
         return ns
 
+    # -- replication tier --------------------------------------------------------
+    @property
+    def replication_enabled(self) -> bool:
+        return any(dtn.replica_pump is not None for dtn in self.dtns)
+
+    def start_replication(self, **pump_kwargs) -> None:
+        """Start one :class:`ReplicaPump` per DTN (async full-mesh shipping).
+
+        Until this is called the logs still accumulate (cheap, in-memory)
+        but nothing is shipped — the pre-replication behavior.  Accepts the
+        pump's threshold knobs (``max_pending``, ``max_age_s``, ``poll_s``).
+        """
+        for dtn in self.dtns:
+            if dtn.replica_pump is None:
+                dtn.replica_pump = ReplicaPump(dtn, self, **pump_kwargs)
+            if not dtn.down:
+                dtn.replica_pump.start()
+
+    def quiesce_replication(self, timeout_s: float = 10.0) -> bool:
+        """Drain every pump until all reachable replicas converge.
+
+        Draining one DTN's log never appends to another's (applies are not
+        re-logged), but a single sweep can race a concurrent writer, so loop
+        until a full pass ships nothing.
+        """
+        deadline = time.time() + timeout_s
+        while True:
+            for dtn in self.dtns:
+                if dtn.replica_pump is not None and not dtn.down:
+                    dtn.replica_pump.quiesce(timeout_s=max(0.1, deadline - time.time()))
+            lag = sum(
+                dtn.replica_pump.lag()
+                for dtn in self.dtns
+                if dtn.replica_pump is not None and not dtn.down
+            )
+            if lag == 0:
+                return True
+            if time.time() > deadline:
+                return False
+
+    def stop_replication(self) -> None:
+        for dtn in self.dtns:
+            if dtn.replica_pump is not None:
+                dtn.replica_pump.stop()
+
+    def crash_dtn(self, dtn_id: int) -> None:
+        self.dtns[dtn_id].crash()
+
+    def restart_dtn(self, dtn_id: int) -> None:
+        self.dtns[dtn_id].restart()
+
     # -- lifecycle ---------------------------------------------------------------
     def start_async_indexers(self, **kwargs) -> None:
         for dtn in self.dtns:
             dtn.start_async_indexer(**kwargs)
 
     def close(self) -> None:
+        self.stop_replication()
         for dtn in self.dtns:
             dtn.close()

@@ -31,6 +31,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 from .backends import StorageBackend
 from .metadata import DiscoveryShard
 from .query import Predicate, Query, parse_query
+from .replication import AppliedMap, EpochClock, ReplicationLog
 from .scidata import attr_type_of, read_header
 
 __all__ = ["ExtractionMode", "DiscoveryService", "AsyncIndexer"]
@@ -56,17 +57,59 @@ def _value_columns(value: Any) -> Dict[str, Any]:
 
 
 class DiscoveryService:
-    """RPC-facing discovery service of one DTN (owns one discovery shard)."""
+    """RPC-facing discovery service of one DTN (owns one discovery shard).
 
-    def __init__(self, shard: DiscoveryShard, *, dtn_id: int, backend: StorageBackend):
+    Replication roles: this shard is the **origin** of every row it extracts
+    or tags (rows stamped ``origin=dtn_id`` with a fresh epoch, and logged
+    for the ReplicaPump), and a **replica** for rows other shards shipped to
+    it via ``apply_replicated_index`` — applied per ``(path, origin)`` with
+    epoch last-writer-wins, so a re-extraction replaces exactly its own
+    origin's earlier rows and never another shard's.
+    """
+
+    def __init__(
+        self,
+        shard: DiscoveryShard,
+        *,
+        dtn_id: int,
+        backend: StorageBackend,
+        clock: Optional[EpochClock] = None,
+        log: Optional[ReplicationLog] = None,
+        applied: Optional[AppliedMap] = None,
+        mutation_lock: Optional[threading.RLock] = None,
+    ):
         self.shard = shard
         self.dtn_id = dtn_id
         self.backend = backend  # the DTN's data-center namespace
         self.extract_count = 0
+        self.clock = clock if clock is not None else EpochClock()
+        self.log = log
+        #: per-origin applied watermark, shared DTN-wide with metadata
+        self.applied = applied if applied is not None else AppliedMap()
+        #: shared with the metadata service: log seq order == epoch order
+        self._mutation_lock = mutation_lock if mutation_lock is not None else threading.RLock()
+        #: (path, origin) -> last applied epoch (replacement-set granularity)
+        self._applied_index: Dict[tuple, int] = {}
+        self._apply_lock = threading.Lock()
 
     # -- indexing --------------------------------------------------------------
-    def insert_attributes(self, rows: List[Dict[str, Any]]) -> int:
-        """Record pre-extracted (path, name, value) rows (Inline-Sync path)."""
+    def insert_attributes(self, rows: List[Dict[str, Any]], epoch: Optional[int] = None) -> int:
+        """Record pre-extracted (path, name, value) rows (Inline-Sync path).
+
+        Callers inside this service pass the mutation's ``epoch`` and log the
+        replacement set themselves; a bare call (RPC surface) ticks and logs
+        here so every local mutation epoch has a shippable record.
+        """
+        external = epoch is None
+        if external:
+            with self._mutation_lock:
+                epoch = self.clock.tick()
+                return self._insert_packed(rows, epoch, log_paths=True)
+        return self._insert_packed(rows, epoch, log_paths=False)
+
+    def _insert_packed(
+        self, rows: List[Dict[str, Any]], epoch: int, *, log_paths: bool
+    ) -> int:
         packed = []
         for r in rows:
             cols = _value_columns(r["value"])
@@ -78,13 +121,54 @@ class DiscoveryService:
                     cols["value_int"],
                     cols["value_real"],
                     cols["value_text"],
+                    self.dtn_id,
+                    epoch,
                 )
             )
-        return self.shard.executemany(
-            "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text)"
-            " VALUES(?,?,?,?,?,?)",
+        n = self.shard.executemany(
+            "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
+            " VALUES(?,?,?,?,?,?,?,?)",
             packed,
         )
+        if log_paths:
+            for path in dict.fromkeys(r["path"] for r in rows):
+                self._log_index(path, epoch)
+        return n
+
+    # -- replication plumbing --------------------------------------------------
+    def _own_rows(self, path: str) -> List[List[Any]]:
+        """This origin's current raw rows for one path (replacement set)."""
+        return [
+            list(r)
+            for r in self.shard.execute(
+                "SELECT attr_name, attr_type, value_int, value_real, value_text"
+                " FROM attributes WHERE path=? AND origin=?",
+                (path, self.dtn_id),
+            )
+        ]
+
+    def _log_index(self, path: str, epoch: int) -> None:
+        """Log this origin's full row set for ``path`` as a replacement record.
+
+        The set is one version: local rows from earlier epochs (e.g. a tag
+        stacked on an extraction) are re-stamped to this epoch so origin and
+        replicas hold byte-identical rows after the record applies.
+        """
+        self.shard.execute(
+            "UPDATE attributes SET epoch=? WHERE path=? AND origin=?",
+            (epoch, path, self.dtn_id),
+        )
+        if self.log is not None:
+            self.log.append(
+                {
+                    "service": "sds",
+                    "op": "index",
+                    "path": path,
+                    "rows": self._own_rows(path),
+                    "epoch": epoch,
+                    "origin": self.dtn_id,
+                }
+            )
 
     def _extract_rows(
         self,
@@ -125,9 +209,17 @@ class DiscoveryService:
         """
         rows = self._extract_rows(path, attr_filter, stat_size)
         self.extract_count += 1
-        # replace any previous index rows for this file
-        self.shard.execute("DELETE FROM attributes WHERE path=?", (path,))
-        return self.insert_attributes(rows)
+        with self._mutation_lock:
+            epoch = self.clock.tick()
+            # replace this origin's previous index rows for this file (a
+            # replica copy of another shard's rows for the same path is left
+            # intact)
+            self.shard.execute(
+                "DELETE FROM attributes WHERE path=? AND origin=?", (path, self.dtn_id)
+            )
+            n = self.insert_attributes(rows, epoch=epoch)
+            self._log_index(path, epoch)
+            return n
 
     def batch_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
         """Extract + index many files as one shard transaction (one RPC).
@@ -140,19 +232,86 @@ class DiscoveryService:
         paths = list(dict.fromkeys(paths))  # idempotent like extract_and_index
         if not paths:
             return 0
-        all_rows: List[Dict[str, Any]] = []
+        with self._mutation_lock:
+            return self._batch_index_locked(paths, attr_filter)
+
+    def _batch_index_locked(
+        self, paths: List[str], attr_filter: Optional[List[str]] = None
+    ) -> int:
+        epochs = {path: self.clock.tick() for path in paths}
+        all_rows: List[tuple] = []
         for path in paths:
-            all_rows.extend(self._extract_rows(path, attr_filter))
+            for r in self._extract_rows(path, attr_filter):
+                cols = _value_columns(r["value"])
+                all_rows.append(
+                    (
+                        r["path"],
+                        r["name"],
+                        cols["attr_type"],
+                        cols["value_int"],
+                        cols["value_real"],
+                        cols["value_text"],
+                        self.dtn_id,
+                        epochs[path],
+                    )
+                )
         self.extract_count += len(paths)
         self.shard.executemany(
-            "DELETE FROM attributes WHERE path=?", [(p,) for p in paths]
+            "DELETE FROM attributes WHERE path=? AND origin=?",
+            [(p, self.dtn_id) for p in paths],
         )
-        self.insert_attributes(all_rows)
+        self.shard.executemany(
+            "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
+            " VALUES(?,?,?,?,?,?,?,?)",
+            all_rows,
+        )
+        for path in paths:
+            self._log_index(path, epochs[path])
         return len(paths)
 
     def tag(self, path: str, name: str, value: Any) -> int:
         """Manual / collaborator-defined tagging (§III-B5)."""
-        return self.insert_attributes([{"path": path, "name": name, "value": value}])
+        with self._mutation_lock:
+            epoch = self.clock.tick()
+            n = self.insert_attributes(
+                [{"path": path, "name": name, "value": value}], epoch=epoch
+            )
+            self._log_index(path, epoch)
+            return n
+
+    # -- replica role ----------------------------------------------------------
+    def apply_replicated_index(self, records: List[Dict[str, Any]]) -> int:
+        """Apply peer origins' index records: per (path, origin) replacement
+        sets, epoch last-writer-wins, idempotent under replay/reorder."""
+        applied = 0
+        with self._apply_lock:
+            for rec in records:
+                origin = int(rec.get("origin", -1))
+                epoch = int(rec.get("epoch", 0))
+                path = rec["path"]
+                self.clock.observe(epoch)
+                self.applied.advance(origin, epoch)  # delivery watermark
+                key = (path, origin)
+                if epoch <= self._applied_index.get(key, 0):
+                    continue
+                self.shard.execute(
+                    "DELETE FROM attributes WHERE path=? AND origin=?", (path, origin)
+                )
+                self.shard.executemany(
+                    "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
+                    " VALUES(?,?,?,?,?,?,?,?)",
+                    [
+                        (path, name, t, vi, vr, vt, origin, epoch)
+                        for name, t, vi, vr, vt in (tuple(r) for r in rec.get("rows") or [])
+                    ],
+                )
+                self._applied_index[key] = epoch
+                applied += 1
+        return applied
+
+    def applied_map(self) -> Dict[str, int]:
+        """Codec-safe applied-epoch map (origin dtn_id as str keys)."""
+        return self.applied.snapshot()
 
     # -- async queue (Inline-ASync) ---------------------------------------------
     def enqueue_index(self, path: str, dc_id: str) -> bool:
@@ -219,7 +378,14 @@ class DiscoveryService:
         """
         matches = [self.query_predicate(**p) for p in predicates]
         union = sorted({p for match in matches for p in match})
-        return {"matches": matches, "rows": self.get_attrs(union)}
+        return {
+            "matches": matches,
+            "rows": self.get_attrs(union),
+            # replica-staleness accounting: what this shard has applied from
+            # each origin, so a replica-local query can be judged fresh/stale
+            "applied": self.applied_map(),
+            "dtn_id": self.dtn_id,
+        }
 
     def get_attrs(self, paths: List[str]) -> List[Dict[str, Any]]:
         """Fetch full attribute rows for the given paths (gather phase)."""

@@ -28,7 +28,9 @@ import sqlite3
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .replication import AppliedMap, EpochClock, ReplicationLog
 
 __all__ = [
     "hash_placement",
@@ -109,7 +111,9 @@ class MetadataShard(_SqliteShard):
             is_dir INTEGER NOT NULL DEFAULT 0,
             ctime REAL NOT NULL,
             mtime REAL NOT NULL,
-            path_hash TEXT NOT NULL
+            path_hash TEXT NOT NULL,
+            epoch INTEGER NOT NULL DEFAULT 0,
+            origin INTEGER NOT NULL DEFAULT -1
         )""",
         "CREATE INDEX IF NOT EXISTS idx_files_parent ON files(parent)",
         "CREATE INDEX IF NOT EXISTS idx_files_ns ON files(ns_id)",
@@ -134,10 +138,13 @@ class DiscoveryShard(_SqliteShard):
             attr_type TEXT NOT NULL,
             value_int INTEGER,
             value_real REAL,
-            value_text TEXT
+            value_text TEXT,
+            origin INTEGER NOT NULL DEFAULT -1,
+            epoch INTEGER NOT NULL DEFAULT 0
         )""",
         "CREATE INDEX IF NOT EXISTS idx_attr_name ON attributes(attr_name)",
         "CREATE INDEX IF NOT EXISTS idx_attr_path ON attributes(path)",
+        "CREATE INDEX IF NOT EXISTS idx_attr_origin ON attributes(path, origin)",
         """CREATE TABLE IF NOT EXISTS pending_index(
             id INTEGER PRIMARY KEY AUTOINCREMENT,
             path TEXT NOT NULL,
@@ -165,6 +172,8 @@ _FILE_COLS = (
     "ctime",
     "mtime",
     "path_hash",
+    "epoch",
+    "origin",
 )
 
 
@@ -177,12 +186,71 @@ class MetadataService:
 
     Method signatures use only message-codec-safe types (see rpc.pack); this
     is the surface a gRPC .proto would describe.
+
+    This DTN is the **origin** of every mutation it accepts over the normal
+    surface: the op ticks the DTN's epoch clock, stamps the row with
+    ``(epoch, origin=dtn_id)``, and appends a record to the replication log
+    for the :class:`~repro.core.replication.ReplicaPump` to ship.  The
+    ``apply_replicated`` surface is the **replica** role: records from peer
+    origins are applied with (epoch, origin) last-writer-wins and never
+    re-logged (full-mesh pumps, no forwarding).
     """
 
-    def __init__(self, shard: MetadataShard, *, dtn_id: int, dc_id: str):
+    def __init__(
+        self,
+        shard: MetadataShard,
+        *,
+        dtn_id: int,
+        dc_id: str,
+        clock: Optional[EpochClock] = None,
+        log: Optional[ReplicationLog] = None,
+        applied: Optional[AppliedMap] = None,
+        mutation_lock: Optional[threading.RLock] = None,
+    ):
         self.shard = shard
         self.dtn_id = dtn_id
         self.dc_id = dc_id
+        self.clock = clock if clock is not None else EpochClock()
+        self.log = log
+        #: per-origin applied watermark, shared DTN-wide with discovery
+        self.applied = applied if applied is not None else AppliedMap()
+        #: serializes tick -> mutate -> log across BOTH services of the DTN,
+        #: so log seq order always matches epoch order — the property the
+        #: pump's cursor and the replicas' AppliedMap watermark rely on
+        self._mutation_lock = mutation_lock if mutation_lock is not None else threading.RLock()
+        #: path -> (epoch, origin) of its unlink, so late upserts stay dead
+        self._tombstones: Dict[str, Tuple[int, int]] = {}
+        self._apply_lock = threading.Lock()
+
+    # -- replication plumbing -------------------------------------------------
+    def _log_record(self, op: str, **payload: Any) -> None:
+        if self.log is not None:
+            self.log.append(dict(payload, service="meta", op=op, origin=self.dtn_id))
+
+    def _tombstoned(self, epoch: int, origin: int, path: str) -> bool:
+        """Is ``path`` covered by an unlink tombstone newer than (epoch, origin)?
+
+        An unlink removes the whole subtree, so its tombstone covers every
+        descendant path — otherwise a child upsert racing the parent's
+        unlink would apply on replicas that saw the unlink first but not on
+        those that saw it second, and the tables would diverge on delivery
+        order.
+        """
+        for tpath, stamp in self._tombstones.items():
+            if (path == tpath or path.startswith(tpath.rstrip("/") + "/")) and (
+                epoch, origin
+            ) <= stamp:
+                return True
+        return False
+
+    def _newer(self, epoch: int, origin: int, path: str) -> bool:
+        """LWW: is (epoch, origin) newer than the stored row AND any tombstone?"""
+        if self._tombstoned(epoch, origin, path):
+            return False
+        rows = self.shard.execute(
+            "SELECT epoch, origin FROM files WHERE path=?", (path,)
+        )
+        return not rows or (epoch, origin) > (rows[0][0], rows[0][1])
 
     # -- FUSE-sequence ops (getattr, lookup, create, write/update, flush) ----
     def getattr(self, path: str) -> Optional[Dict[str, Any]]:
@@ -205,6 +273,19 @@ class MetadataService:
         sync: bool = True,
         size: int = 0,
     ) -> Dict[str, Any]:
+        with self._mutation_lock:
+            return self._create_locked(path, owner, dc_id, ns_id, is_dir, sync, size)
+
+    def _create_locked(
+        self,
+        path: str,
+        owner: str,
+        dc_id: str,
+        ns_id: int,
+        is_dir: bool,
+        sync: bool,
+        size: int,
+    ) -> Dict[str, Any]:
         now = time.time()
         name = path.rstrip("/").rsplit("/", 1)[-1] or "/"
         parent = path.rstrip("/").rsplit("/", 1)[0] or "/"
@@ -222,60 +303,182 @@ class MetadataService:
             "ctime": now,
             "mtime": now,
             "path_hash": path_hash(path),
+            "epoch": self.clock.tick(),
+            "origin": self.dtn_id,
         }
+        self._tombstones.pop(path, None)  # a local re-create supersedes unlink
         self.shard.execute(
             f"INSERT OR REPLACE INTO files({','.join(_FILE_COLS)}) "
             f"VALUES({','.join('?' * len(_FILE_COLS))})",
             tuple(entry[c] for c in _FILE_COLS),
         )
+        self._log_record("upsert", entries=[dict(entry)], epoch=entry["epoch"])
         return entry
 
-    def update(self, path: str, size: Optional[int] = None, sync: Optional[bool] = None) -> bool:
-        sets, params = ["mtime=?"], [time.time()]
-        if size is not None:
-            sets.append("size=?")
-            params.append(size)
-        if sync is not None:
-            sets.append("sync=?")
-            params.append(1 if sync else 0)
-        params.append(path)
-        self.shard.execute(f"UPDATE files SET {','.join(sets)} WHERE path=?", params)
-        return True
+    def update(
+        self,
+        path: str,
+        size: Optional[int] = None,
+        sync: Optional[bool] = None,
+        fence_epoch: Optional[int] = None,
+    ) -> bool:
+        """Origin-role metadata update; epoch-stamped and logged.
+
+        ``fence_epoch`` guards journal replays: the update applies only if
+        the stored row is not newer than the epoch the (crashed) writer had
+        witnessed when the update was acknowledged — otherwise a concurrent
+        write that superseded it wins and the stale replay is dropped.
+        """
+        with self._mutation_lock:
+            if fence_epoch is not None:
+                rows = self.shard.execute("SELECT epoch FROM files WHERE path=?", (path,))
+                if rows and rows[0][0] > fence_epoch:
+                    return False
+            now = time.time()
+            epoch = self.clock.tick()
+            sets, params = ["mtime=?", "epoch=?", "origin=?"], [now, epoch, self.dtn_id]
+            if size is not None:
+                sets.append("size=?")
+                params.append(size)
+            if sync is not None:
+                sets.append("sync=?")
+                params.append(1 if sync else 0)
+            params.append(path)
+            self.shard.execute(f"UPDATE files SET {','.join(sets)} WHERE path=?", params)
+            # the record carries the origin's wall-clock mtime so replicas
+            # apply byte-identical rows, not their own timestamps
+            self._log_record(
+                "update",
+                path=path,
+                epoch=epoch,
+                mtime=now,
+                size=size,
+                sync=None if sync is None else (1 if sync else 0),
+            )
+            return True
 
     def delete(self, path: str) -> bool:
-        self.shard.execute("DELETE FROM files WHERE path=? OR path LIKE ?", (path, path + "/%"))
-        return True
+        with self._mutation_lock:
+            epoch = self.clock.tick()
+            self._tombstones[path] = (epoch, self.dtn_id)
+            self.shard.execute(
+                "DELETE FROM files WHERE path=? OR path LIKE ?", (path, path + "/%")
+            )
+            self._log_record("unlink", path=path, epoch=epoch)
+            return True
 
     # -- MEU: one batched RPC commits many entries (§III-B3) -----------------
     def batch_upsert(self, entries: List[Dict[str, Any]]) -> int:
+        with self._mutation_lock:
+            return self._batch_upsert_locked(entries)
+
+    def _batch_upsert_locked(self, entries: List[Dict[str, Any]]) -> int:
         rows = []
+        logged: List[Dict[str, Any]] = []
         now = time.time()
+        last_epoch = 0
         for e in entries:
             path = e["path"]
             name = path.rstrip("/").rsplit("/", 1)[-1] or "/"
             parent = path.rstrip("/").rsplit("/", 1)[0] or "/"
-            rows.append(
-                (
-                    path,
-                    name,
-                    parent,
-                    int(e.get("size", 0)),
-                    e.get("owner", ""),
-                    e["dc_id"],
-                    self.dtn_id,
-                    int(e.get("ns_id", 0)),
-                    int(e.get("sync", 1)),
-                    int(e.get("is_dir", 0)),
-                    float(e.get("ctime", now)),
-                    float(e.get("mtime", now)),
-                    path_hash(path),
-                )
-            )
-        return self.shard.executemany(
+            last_epoch = self.clock.tick()
+            entry = {
+                "path": path,
+                "name": name,
+                "parent": parent,
+                "size": int(e.get("size", 0)),
+                "owner": e.get("owner", ""),
+                "dc_id": e["dc_id"],
+                "dtn_id": self.dtn_id,
+                "ns_id": int(e.get("ns_id", 0)),
+                "sync": int(e.get("sync", 1)),
+                "is_dir": int(e.get("is_dir", 0)),
+                "ctime": float(e.get("ctime", now)),
+                "mtime": float(e.get("mtime", now)),
+                "path_hash": path_hash(path),
+                "epoch": last_epoch,
+                "origin": self.dtn_id,
+            }
+            self._tombstones.pop(path, None)
+            rows.append(tuple(entry[c] for c in _FILE_COLS))
+            logged.append(entry)
+        n = self.shard.executemany(
             f"INSERT OR REPLACE INTO files({','.join(_FILE_COLS)}) "
             f"VALUES({','.join('?' * len(_FILE_COLS))})",
             rows,
         )
+        if logged:
+            self._log_record("upsert", entries=logged, epoch=last_epoch)
+        return n
+
+    # -- replica role: apply a peer origin's records (LWW, idempotent) --------
+    def apply_replicated(self, records: List[Dict[str, Any]]) -> int:
+        """Apply epoch-stamped records shipped by a peer's ReplicaPump.
+
+        Safe under replay, reorder and duplication: each row applies only
+        when its ``(epoch, origin)`` exceeds what the shard already holds
+        (including tombstones), and records are never re-logged.
+        """
+        applied = 0
+        with self._apply_lock:
+            for rec in records:
+                op = rec.get("op")
+                origin = int(rec.get("origin", -1))
+                epoch = int(rec.get("epoch", 0))
+                self.clock.observe(epoch)
+                # delivery watermark: a record superseded by LWW still counts
+                # as applied — the origin's history up to this epoch is here
+                self.applied.advance(origin, epoch)
+                if op == "upsert":
+                    for entry in rec.get("entries") or []:
+                        if not self._newer(int(entry["epoch"]), int(entry["origin"]), entry["path"]):
+                            continue
+                        self.shard.execute(
+                            f"INSERT OR REPLACE INTO files({','.join(_FILE_COLS)}) "
+                            f"VALUES({','.join('?' * len(_FILE_COLS))})",
+                            tuple(entry[c] for c in _FILE_COLS),
+                        )
+                        applied += 1
+                elif op == "update":
+                    path = rec["path"]
+                    if not self._newer(epoch, origin, path):
+                        continue
+                    sets, params = ["mtime=?", "epoch=?", "origin=?"], [
+                        float(rec.get("mtime", time.time())), epoch, origin,
+                    ]
+                    if rec.get("size") is not None:
+                        sets.append("size=?")
+                        params.append(int(rec["size"]))
+                    if rec.get("sync") is not None:
+                        sets.append("sync=?")
+                        params.append(int(rec["sync"]))
+                    params.append(path)
+                    self.shard.execute(
+                        f"UPDATE files SET {','.join(sets)} WHERE path=?", params
+                    )
+                    applied += 1
+                elif op == "unlink":
+                    path = rec["path"]
+                    tomb = self._tombstones.get(path)
+                    if tomb is not None and (epoch, origin) <= tomb:
+                        continue
+                    self._tombstones[path] = (epoch, origin)
+                    self.shard.execute(
+                        "DELETE FROM files WHERE (path=? OR path LIKE ?) AND (epoch < ? OR (epoch = ? AND origin < ?))",
+                        (path, path + "/%", epoch, epoch, origin),
+                    )
+                    applied += 1
+        return applied
+
+    def getattr_replica(self, path: str, origin: int) -> Dict[str, Any]:
+        """Replica-role read: the local row plus this shard's applied
+        high-water mark for the path's origin DTN, so the caller can judge
+        staleness against the epochs it has itself witnessed."""
+        return {
+            "entry": self.getattr(path),
+            "applied": self.applied.get(origin),
+            "epoch": self.clock.current(),
+        }
 
     # -- listing with sync-flag + namespace-visibility semantics (§III-B1/B4)
     def _visibility_clause(self, requester: str) -> tuple:
@@ -299,6 +502,17 @@ class MetadataService:
         sql += " AND (f.path=? OR f.path LIKE ?)"
         rows = self.shard.execute(sql, params + (prefix, prefix.rstrip("/") + "/%"))
         return [_row_to_entry(r) for r in rows]
+
+    # -- replica-role listings: entries + this shard's applied watermarks, so
+    # the caller can judge whether the listing may miss writes it witnessed
+    def applied_map(self) -> Dict[str, int]:
+        return self.applied.snapshot()
+
+    def list_dir_replica(self, parent: str, requester: str) -> Dict[str, Any]:
+        return {"entries": self.list_dir(parent, requester), "applied": self.applied_map()}
+
+    def list_all_replica(self, requester: str, prefix: str = "/") -> Dict[str, Any]:
+        return {"entries": self.list_all(requester, prefix), "applied": self.applied_map()}
 
     # -- namespace table (replicated to every shard) --------------------------
     def put_namespace(self, ns_id: int, name: str, scope: str, owner: str, prefix: str) -> bool:

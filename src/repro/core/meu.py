@@ -46,6 +46,10 @@ class ExportReport:
     bytes_sent: int = 0
     scan_seconds: float = 0.0
     commit_seconds: float = 0.0
+    #: "sync-fanout" = one batch per owning DTN collaboration-wide (paper's
+    #: protocol); "async-log" = origin-commit on the home DC only, shipped
+    #: to peers by the replication tier
+    mode: str = "sync-fanout"
 
     def total_exported(self) -> int:
         return self.exported_files + self.exported_dirs
@@ -116,8 +120,20 @@ class MEU:
         *,
         exclude: Optional[Callable[[str], bool]] = None,
         mark_synced: bool = True,
+        via_replication: Optional[bool] = None,
     ) -> ExportReport:
-        """Scan + mark + single batched commit per owning DTN."""
+        """Scan + mark + batched commit.
+
+        With the collaboration's replication tier running (or
+        ``via_replication=True``) the commit is the paper's asynchronous
+        export made literal: entries are committed **once**, as origin rows
+        on this data center's own DTNs (local hash placement, like
+        LW-offline extraction), appended to their replication logs, and the
+        ReplicaPump ships them to every other DTN in the background — the
+        WAN sees the batches off the commit path, within the pump's
+        count/age lag bound.  Otherwise the commit fans out synchronously,
+        one batch per owning DTN collaboration-wide (global hash).
+        """
         report = ExportReport()
         t0 = time.perf_counter()
         entries = self.scan(root, report)
@@ -125,17 +141,28 @@ class MEU:
             entries = [e for e in entries if not exclude(e["path"])]
         report.scan_seconds = time.perf_counter() - t0
 
+        use_log = (
+            via_replication
+            if via_replication is not None
+            else self.collab.replication_enabled
+        )
         t1 = time.perf_counter()
-        # group by owning DTN (global pathname hash), one batch RPC per DTN;
-        # the plane fans the per-DTN commits out concurrently (bounded)
-        n = len(self.collab.dtns)
+        # one batch RPC per target DTN; the plane fans the commits out
+        # concurrently (bounded).  async-log targets only the home DC.
+        if use_log:
+            report.mode = "async-log"
+            local_ids = [d.dtn_id for d in self.dc.dtns]
+            placement = lambda path: local_ids[hash_placement(path, len(local_ids))]
+        else:
+            n = len(self.collab.dtns)
+            placement = lambda path: hash_placement(path, n)
         batches: Dict[int, List[Dict]] = {}
         for e in entries:
             e2 = dict(e)
             e2["dc_id"] = self.dc.dc_id
             e2["ns_id"] = self.collab.namespaces.resolve(e["path"]).ns_id
             e2["sync"] = 1
-            batches.setdefault(hash_placement(e["path"], n), []).append(e2)
+            batches.setdefault(placement(e["path"]), []).append(e2)
         before = {i: self.plane.meta[i].stats.bytes_sent for i in batches}
         self.plane.scatter(
             "meta",

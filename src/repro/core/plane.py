@@ -42,6 +42,7 @@ from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .metadata import hash_placement, path_hash
+from .replication import WB_MAX_AGE_S, WB_MAX_PENDING, WriteBackJournal
 from .rpc import RpcClient, RpcError
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->plane cycle
@@ -216,17 +217,39 @@ class ServicePlane:
         cache_entries: int = 4096,
         write_back: bool = False,
         subscribe: bool = True,
+        journal_path: Optional[str] = None,
+        wb_max_pending: int = WB_MAX_PENDING,
+        wb_max_age_s: float = WB_MAX_AGE_S,
+        prefer_replica: bool = False,
     ):
         self.collab = collab
         self.home_dc = home_dc
         self.write_back = write_back
+        self.prefer_replica = prefer_replica
         self.meta: List[RpcClient] = []
         self.sds: List[RpcClient] = []
         for dtn in collab.dtns:
             ch = collab.channel_policy(home_dc, dtn.dc_id)
             self.meta.append(RpcClient(dtn.metadata_server, ch))
             self.sds.append(RpcClient(dtn.discovery_server, ch))
+        #: global indices of this client's home-DC DTNs (nearest replicas)
+        self.local_dtns: List[int] = [
+            i for i, dtn in enumerate(collab.dtns) if dtn.dc_id == home_dc
+        ]
         self.cache = AttrCache(cache_entries)
+        #: crash-recoverable buffer of deferred write-back updates; with a
+        #: journal_path each deferred update is on disk before the write is
+        #: acknowledged, and leftover records from a crashed predecessor are
+        #: replayed into the dirty set here (committed on the next flush)
+        self.journal = WriteBackJournal(
+            journal_path, max_pending=wb_max_pending, max_age_s=wb_max_age_s
+        )
+        for path, kw in self.journal.recover().items():
+            self.cache.mark_dirty(path, **kw)
+        #: path -> witnessed-epoch fence for recovered (replayed) updates
+        self._journal_fences: Dict[str, int] = self.journal.recovered_fences()
+        self.replica_hits = 0
+        self.replica_stale_fallbacks = 0
         self._bus: Optional[InvalidationBus] = getattr(collab, "invalidations", None)
         # write-only clients (MEU) publish invalidations but never read
         # through their cache, so they skip the subscription — otherwise every
@@ -344,13 +367,63 @@ class ServicePlane:
         self._pay_windows(delays)
         return out
 
+    # -- epoch accounting ------------------------------------------------------
+    def seen_epoch(self, dtn_idx: int) -> int:
+        """Highest epoch this client has witnessed from a DTN's envelopes —
+        the session-consistency bar a replica must meet to serve its rows."""
+        return max(self.meta[dtn_idx].last_epoch, self.sds[dtn_idx].last_epoch)
+
+    def seen_epochs(self) -> Dict[int, int]:
+        return {i: self.seen_epoch(i) for i in range(len(self.meta))}
+
+    def _nearest_replica(self, path: str) -> Optional[int]:
+        """A home-DC DTN to serve this path's replica row (spread by hash)."""
+        if not self.local_dtns:
+            return None
+        return self.local_dtns[hash_placement(path, len(self.local_dtns))]
+
     # -- cached metadata surface ----------------------------------------------
     def stat(self, path: str) -> Optional[Dict[str, Any]]:
-        """Cache-first getattr.  A hit is zero RPCs; a miss fills the cache."""
+        """Cache-first getattr.  A hit is zero RPCs; a miss fills the cache.
+
+        With ``prefer_replica`` (and the collaboration's replication tier
+        running) a path owned by a remote-DC DTN is read from the nearest
+        home-DC replica instead — one intra-DC round-trip instead of a
+        cross-DC one.  The replica serves only when it has applied every
+        epoch this client has witnessed from the origin (session
+        consistency: your own acknowledged writes are always re-readable);
+        otherwise the read falls back to the origin.  Replica-served rows
+        carry a ``"replica"`` tag with the serving DTN and its applied/lag
+        accounting — cached rows stay untagged.
+        """
         cached = self.cache.get(path)
         if not AttrCache.is_miss(cached):
             return cached
-        entry = self.meta_call(self.owner(path), "getattr", path=path)
+        owner = self.owner(path)
+        if (
+            self.prefer_replica
+            and owner not in self.local_dtns
+            and getattr(self.collab, "replication_enabled", False)
+        ):
+            nearest = self._nearest_replica(path)
+            if nearest is not None:
+                rep = self.meta_call(nearest, "getattr_replica", path=path, origin=owner)
+                bar = self.seen_epoch(owner)
+                entry = rep.get("entry")
+                # a missing row is never provably fresh — only positive hits
+                # that meet the session bar are served from the replica
+                if entry is not None and rep.get("applied", 0) >= bar:
+                    self.replica_hits += 1
+                    self.cache.put(path, entry)
+                    tagged = dict(entry)
+                    tagged["replica"] = {
+                        "dtn": nearest,
+                        "applied": rep.get("applied", 0),
+                        "behind": max(0, bar - rep.get("applied", 0)),
+                    }
+                    return tagged
+                self.replica_stale_fallbacks += 1
+        entry = self.meta_call(owner, "getattr", path=path)
         if entry is not None:
             self.cache.put(path, entry)
         return entry
@@ -371,20 +444,55 @@ class ServicePlane:
 
     # -- write-back ------------------------------------------------------------
     def defer_update(self, path: str, **update_kwargs: Any) -> None:
-        """Buffer a metadata ``update`` (the five-op 'flush') for later commit."""
+        """Buffer a metadata ``update`` (the five-op 'flush') for later commit.
+
+        The update is journaled (durably, when the journal is on disk)
+        *before* this returns — that is the acknowledgement point — then the
+        journal's count/age thresholds decide whether to flush now.
+        """
+        self.journal.append(path, update_kwargs, epoch=self.seen_epoch(self.owner(path)))
+        # a live deferred update supersedes any fence recovered for this path
+        # from a crashed predecessor — fencing it would drop OUR acknowledged
+        # write whenever another client has since touched the row
+        self._journal_fences.pop(path, None)
         self.cache.mark_dirty(path, **update_kwargs)
+        if self.journal.should_flush():
+            self.flush()
+
+    def maybe_flush(self) -> int:
+        """Flush iff a write-back threshold (count/age) has fired."""
+        return self.flush() if self.journal.should_flush() else 0
 
     def flush(self) -> int:
         """Commit buffered updates: one batched ``update`` per owner DTN."""
         dirty = self.cache.take_dirty()
+        # the journal may hold more than the cache: entries evicted by
+        # cross-client invalidation (superseded — replaying them would
+        # clobber newer rows, so the journal follows the cache's dirty set)
         if not dirty:
+            self.journal.mark_flushed()
             return 0
         calls_by_dtn: Dict[int, List[Tuple[str, Dict[str, Any]]]] = {}
         for path, kw in dirty.items():
+            if path in self._journal_fences:
+                # recovered from a crashed predecessor: fence the update so a
+                # newer cross-client row (whose invalidation the dead process
+                # never saw) wins at the origin instead of being clobbered
+                kw = dict(kw, fence_epoch=self._journal_fences[path])
             calls_by_dtn.setdefault(self.owner(path), []).append(
                 ("update", dict(kw, path=path))
             )
-        self.scatter_batch("meta", calls_by_dtn)
+        try:
+            self.scatter_batch("meta", calls_by_dtn)
+        except RpcError:
+            # an acknowledged update must survive a failed commit: restore
+            # the dirty set (the journal still holds every record) and let a
+            # later flush retry — re-sends are idempotent at the origin
+            for path, kw in dirty.items():
+                self.cache.mark_dirty(path, **kw)
+            raise
+        self._journal_fences = {}
+        self.journal.mark_flushed()
         self.publish(list(dirty))
         return len(dirty)
 
@@ -396,6 +504,16 @@ class ServicePlane:
                 agg[k] = agg.get(k, 0) + v
         return agg
 
+    def crash(self) -> None:
+        """Simulate client death: nothing is flushed, the journal file (if
+        any) keeps its records for a successor plane to recover."""
+        if self._closed:
+            return
+        self._closed = True
+        self.journal.close()
+        if self._bus is not None:
+            self._bus.unsubscribe(self.cache)
+
     def close(self) -> None:
         if self._closed:
             return
@@ -404,5 +522,6 @@ class ServicePlane:
             self.flush()
         except RpcError:
             pass  # best-effort: the services may already be gone at teardown
+        self.journal.close()
         if self._bus is not None:
             self._bus.unsubscribe(self.cache)

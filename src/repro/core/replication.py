@@ -1,0 +1,518 @@
+"""Asynchronous cross-DC metadata replication + crash-recoverable write-back.
+
+The paper's metadata-export protocol (§III-B3) is an *asynchronous
+replication channel* between native namespaces: a data center commits
+metadata locally, and a background utility ships it to the collaboration —
+"in a similar fashion to git local and remote repository management".  This
+module generalizes that protocol from a one-shot utility into a standing
+replication tier for the whole metadata plane:
+
+- :class:`EpochClock` — a per-DTN Lamport clock.  Every local mutation
+  ticks it; every message observed from a peer merges it.  A mutation is
+  globally ordered by ``(epoch, origin_dtn)`` — last-writer-wins, the same
+  resolution XUFS (arXiv:1001.0196) uses for write-back replay and the
+  OSDF's origin/replica caches rely on for staleness accounting.
+- :class:`ReplicationLog` — a per-DTN append-only log of epoch-stamped
+  metadata mutations (file upsert / update / unlink, discovery index).
+  This is the durable record the paper's MEU "single batched message" is
+  built from, kept continuously instead of rebuilt by directory scans.
+- :class:`ReplicaPump` — the asynchronous carrier.  A background worker
+  (per DTN) drains that DTN's log to every peer DTN through the metadata
+  plane's batched RPC (one ``apply_replicated`` batch per peer per drain),
+  with the same count/age thresholds as the SDS
+  :class:`~repro.core.discovery.AsyncIndexer` — the paper's "pre-defined
+  threshold such as time, size and file count" — bounding replica lag.
+  Peers apply records with (epoch, origin) last-writer-wins, so replays,
+  reorders and duplicate deliveries converge.
+- :class:`WriteBackJournal` — the client half of durability.  The plane's
+  write-back mode buffers the FUSE five-op "flush" update; the journal
+  makes that buffer crash-recoverable: each deferred update is appended to
+  an on-disk journal *before* the write is acknowledged, and
+  :meth:`WriteBackJournal.recover` replays the buffered updates after a
+  crash.  Count/age thresholds trigger the batched flush exactly like the
+  AsyncIndexer's drain.
+
+Roles fall out of placement: the DTN that owns a path's global hash is the
+**origin** of its mutations; every other DTN holds an asynchronous
+**replica** row stamped with the origin's epoch.  Readers (plane / query
+planner) may serve from the nearest replica and fall back to the origin
+when the replica has not yet applied the epochs the reader has witnessed
+(session consistency: you always re-read your own acknowledged writes).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import time
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
+
+from .rpc import RpcError, pack, unpack
+
+if TYPE_CHECKING:  # pragma: no cover - type-only imports
+    from .cluster import Collaboration, DTN
+
+__all__ = [
+    "AppliedMap",
+    "EpochClock",
+    "ReplicationLog",
+    "ReplicaPump",
+    "WriteBackJournal",
+    "WB_MAX_PENDING",
+    "WB_MAX_AGE_S",
+    "PUMP_MAX_PENDING",
+    "PUMP_MAX_AGE_S",
+]
+
+#: write-back journal flush thresholds (mirroring AsyncIndexer's defaults;
+#: the testbed config re-exports these so benchmarks tune them in one place)
+WB_MAX_PENDING = 64
+WB_MAX_AGE_S = 0.5
+#: replication pump drain thresholds (bounded replica lag)
+PUMP_MAX_PENDING = 64
+PUMP_MAX_AGE_S = 0.05
+
+
+class EpochClock:
+    """Thread-safe Lamport clock; epochs are positive, 0 means "never".
+
+    Two readings: :meth:`current` is the merged Lamport value (ordering —
+    what ticks must exceed), :meth:`last_local` is the epoch of this node's
+    own most recent *mutation*.  Freshness bars use ``last_local``: a
+    replica has caught up with an origin when it has applied the origin's
+    mutations, not when it has heard epochs the origin merely observed from
+    others (those inflate ``current`` without producing any record to ship).
+    """
+
+    def __init__(self, start: int = 0):
+        self._value = int(start)
+        self._last_local = 0
+        self._lock = threading.Lock()
+
+    def current(self) -> int:
+        with self._lock:
+            return self._value
+
+    def last_local(self) -> int:
+        with self._lock:
+            return self._last_local
+
+    def tick(self) -> int:
+        """Advance for a local mutation; returns the mutation's epoch."""
+        with self._lock:
+            self._value += 1
+            self._last_local = self._value
+            return self._value
+
+    def observe(self, epoch: int) -> int:
+        """Merge an epoch seen in a message (Lamport receive rule)."""
+        with self._lock:
+            if epoch > self._value:
+                self._value = int(epoch)
+            return self._value
+
+
+class AppliedMap:
+    """Per-origin high-water mark of replicated epochs applied at one DTN.
+
+    Shared by the DTN's metadata and discovery services: both feed one log
+    (one clock, epochs monotone in log order), so a single watermark per
+    origin states "every mutation of this origin up to epoch E has been
+    applied here" regardless of which service the mutation touched.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._epochs: Dict[int, int] = {}
+
+    def advance(self, origin: int, epoch: int) -> None:
+        with self._lock:
+            if epoch > self._epochs.get(origin, 0):
+                self._epochs[origin] = int(epoch)
+
+    def get(self, origin: int) -> int:
+        with self._lock:
+            return self._epochs.get(origin, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Codec-safe copy (str origin keys for the message layer)."""
+        with self._lock:
+            return {str(o): e for o, e in self._epochs.items()}
+
+
+class ReplicationLog:
+    """Per-DTN append-only log of epoch-stamped metadata mutations.
+
+    Records are codec-safe dicts carrying at least ``service`` ("meta" or
+    "sds"), ``op``, ``epoch``, ``origin`` and a payload; :meth:`append`
+    assigns the monotonically increasing ``seq`` and timestamps the record.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._records: List[Dict[str, Any]] = []
+        self._base_seq = 0  # seq of the first retained record minus one
+        self.appended = 0
+
+    def append(self, record: Dict[str, Any]) -> int:
+        with self._lock:
+            seq = self._base_seq + len(self._records) + 1
+            record = dict(record, seq=seq, t=time.time())
+            self._records.append(record)
+            self.appended += 1
+            return seq
+
+    def last_seq(self) -> int:
+        with self._lock:
+            return self._base_seq + len(self._records)
+
+    def since(self, seq: int, limit: int = -1) -> List[Dict[str, Any]]:
+        """Records with ``seq`` strictly greater than the cursor, in order."""
+        with self._lock:
+            start = max(0, seq - self._base_seq)
+            out = self._records[start:]
+            if limit > 0:
+                out = out[:limit]
+            return [dict(r) for r in out]
+
+    def pending_for(self, seq: int) -> int:
+        return max(0, self.last_seq() - seq)
+
+    def oldest_age_for(self, seq: int) -> float:
+        """Age of the oldest record a cursor has not yet shipped."""
+        with self._lock:
+            start = max(0, seq - self._base_seq)
+            if start >= len(self._records):
+                return 0.0
+            return time.time() - self._records[start]["t"]
+
+    def truncate_upto(self, seq: int) -> int:
+        """Drop records every consumer has shipped (``seq`` = min cursor)."""
+        with self._lock:
+            drop = min(max(0, seq - self._base_seq), len(self._records))
+            if drop:
+                del self._records[:drop]
+                self._base_seq += drop
+            return drop
+
+
+class ReplicaPump:
+    """Drains one DTN's replication log to every peer DTN, asynchronously.
+
+    The carrier is the metadata plane's batched RPC: per drain, each peer
+    receives at most one ``apply_replicated`` batch (metadata records) and
+    one ``apply_replicated_index`` batch (discovery records), all peers in
+    flight concurrently with the plane's bounded fan-out.  A peer that is
+    down (``RpcError``) simply keeps its cursor; the next drain retries, so
+    a restarted DTN recovers the records it missed without a special path.
+    """
+
+    def __init__(
+        self,
+        dtn: "DTN",
+        collab: "Collaboration",
+        *,
+        max_pending: int = PUMP_MAX_PENDING,
+        max_age_s: float = PUMP_MAX_AGE_S,
+        poll_s: float = 0.01,
+        batch_limit: int = 512,
+    ):
+        from .plane import ServicePlane  # local import: plane imports nothing from here
+
+        self.dtn = dtn
+        self.collab = collab
+        self.log = dtn.replication_log
+        self.max_pending = max_pending
+        self.max_age_s = max_age_s
+        self.poll_s = poll_s
+        self.batch_limit = batch_limit
+        self.plane = ServicePlane(collab, dtn.dc_id, subscribe=False)
+        self._cursors: Dict[int, int] = {}  # peer dtn_id -> last seq shipped
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.records_shipped = 0
+        self.drains = 0
+        self.send_errors = 0
+
+    # -- lag accounting --------------------------------------------------------
+    def _peers(self, include_down: bool = True) -> List[int]:
+        return [
+            d.dtn_id
+            for d in self.collab.dtns
+            if d.dtn_id != self.dtn.dtn_id and (include_down or not d.down)
+        ]
+
+    def min_cursor(self, include_down: bool = True) -> int:
+        """Slowest peer's cursor.  Log truncation must include down peers
+        (their records are still owed); lag/quiesce accounting must not, or
+        one crashed DTN makes the lag unbounded."""
+        peers = self._peers(include_down)
+        if not peers:
+            return self.log.last_seq()
+        with self._lock:
+            return min(self._cursors.get(p, 0) for p in peers)
+
+    def lag(self) -> int:
+        """Records the slowest *reachable* peer has not applied yet."""
+        return self.log.pending_for(self.min_cursor(include_down=False))
+
+    def _should_drain(self) -> bool:
+        behind = self.min_cursor(include_down=False)
+        if self.log.pending_for(behind) >= self.max_pending:
+            return True
+        age = self.log.oldest_age_for(behind)
+        return age > 0 and age >= self.max_age_s
+
+    # -- the drain body --------------------------------------------------------
+    def drain(self) -> int:
+        """Ship pending records to every lagging peer; returns records sent.
+
+        Per peer, the window ships as contiguous same-service runs **in log
+        order** (metadata and discovery records interleave on one log but
+        target different servers).  A run failure stops that peer's window:
+        the cursor advances only past fully-applied runs, so the receiver's
+        AppliedMap watermark — which rises as records apply — can never
+        claim an epoch whose earlier records are still unsent.
+        """
+        sent_total = 0
+        for p in self._peers():
+            with self._lock:
+                cur = self._cursors.get(p, 0)
+            recs = self.log.since(cur, limit=self.batch_limit)
+            if not recs:
+                continue
+            runs: List[Tuple[str, List[Dict[str, Any]]]] = []
+            for r in recs:
+                if runs and runs[-1][0] == r.get("service"):
+                    runs[-1][1].append(r)
+                else:
+                    runs.append((r.get("service"), [r]))
+            advanced = cur
+            for service, run in runs:
+                method = (
+                    "apply_replicated" if service == "meta" else "apply_replicated_index"
+                )
+                try:
+                    self.plane.call(service, p, method, records=run)
+                except RpcError:
+                    self.send_errors += 1
+                    break
+                advanced = run[-1]["seq"]
+            with self._lock:
+                if advanced > self._cursors.get(p, 0):
+                    sent_total += advanced - self._cursors.get(p, 0)
+                    self._cursors[p] = advanced
+        self.records_shipped += sent_total
+        self.drains += 1
+        self.log.truncate_upto(self.min_cursor(include_down=True))
+        return sent_total
+
+    def quiesce(self, timeout_s: float = 10.0) -> bool:
+        """Drain until every reachable peer has everything (or timeout)."""
+        deadline = time.time() + timeout_s
+        while self.lag() > 0:
+            before = self.min_cursor(include_down=False)
+            self.drain()
+            if self.min_cursor(include_down=False) == before:
+                if time.time() > deadline:
+                    return False
+                time.sleep(self.poll_s)  # no progress: back off, don't spin
+        return True
+
+    # -- worker lifecycle ------------------------------------------------------
+    def start(self) -> "ReplicaPump":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name=f"replica-pump-dtn{self.dtn.dtn_id}", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            if self._should_drain():
+                self.drain()
+            self._stop.wait(self.poll_s)
+
+    def stop(self, drain: bool = True) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+        if drain:
+            self.drain()
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "dtn_id": self.dtn.dtn_id,
+            "lag_records": self.lag(),
+            "records_shipped": self.records_shipped,
+            "drains": self.drains,
+            "send_errors": self.send_errors,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Client-side write-back journal
+# ---------------------------------------------------------------------------
+
+_JOURNAL_MAGIC = b"WBJ1"
+
+
+class WriteBackJournal:
+    """Crash-recoverable buffer of deferred metadata updates.
+
+    Disk layout: a 4-byte magic header, then length-prefixed packed records
+    ``{"path", "kw", "epoch", "t"}``.  A record is on disk *before* the
+    write is acknowledged, so a crash between acknowledgement and flush
+    loses nothing; a torn final record (crash mid-append) is discarded on
+    recovery.  ``path=None`` keeps the journal purely in memory (the
+    pre-journal behavior, for throwaway planes).
+    """
+
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        *,
+        max_pending: int = WB_MAX_PENDING,
+        max_age_s: float = WB_MAX_AGE_S,
+    ):
+        self.path = path
+        self.max_pending = max_pending
+        self.max_age_s = max_age_s
+        self._lock = threading.Lock()
+        self._pending: Dict[str, Dict[str, Any]] = {}
+        self._fences: Dict[str, int] = {}
+        self._first_dirty_t: Optional[float] = None
+        self._file_dirty = False
+        self._fh = None
+        if path is not None:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            fresh = not os.path.exists(path) or os.path.getsize(path) == 0
+            if not fresh:
+                # drop a torn tail (predecessor crashed mid-append) BEFORE
+                # appending, or our records would land behind unreadable
+                # bytes and be invisible to the next recovery
+                _, valid_end = self._scan(path)
+                os.truncate(path, valid_end)
+                fresh = valid_end == 0
+            self._fh = open(path, "ab")
+            if fresh:
+                self._fh.write(_JOURNAL_MAGIC)
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+
+    # -- append / thresholds ---------------------------------------------------
+    def append(self, path: str, kw: Dict[str, Any], epoch: int = 0) -> None:
+        """Record one deferred update durably; merges with earlier ones."""
+        with self._lock:
+            self._pending.setdefault(path, {}).update(kw)
+            if self._first_dirty_t is None:
+                self._first_dirty_t = time.time()
+            if self._fh is not None:
+                payload = pack({"path": path, "kw": dict(kw), "epoch": epoch, "t": time.time()})
+                self._fh.write(struct.pack("<I", len(payload)))
+                self._fh.write(payload)
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+                self._file_dirty = True
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def oldest_age(self) -> float:
+        with self._lock:
+            return 0.0 if self._first_dirty_t is None else time.time() - self._first_dirty_t
+
+    def should_flush(self) -> bool:
+        """Either threshold fired: buffered-path count or oldest-entry age."""
+        with self._lock:
+            if not self._pending:
+                return False
+            if len(self._pending) >= self.max_pending:
+                return True
+            return (
+                self._first_dirty_t is not None
+                and (time.time() - self._first_dirty_t) >= self.max_age_s
+            )
+
+    def pending(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {p: dict(kw) for p, kw in self._pending.items()}
+
+    def mark_flushed(self) -> None:
+        """The buffered updates reached their origin DTNs; reset durably."""
+        with self._lock:
+            self._pending.clear()
+            self._first_dirty_t = None
+            if self._fh is not None and self._file_dirty:
+                self._fh.truncate(0)
+                self._fh.seek(0)
+                self._fh.write(_JOURNAL_MAGIC)
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+                self._file_dirty = False
+
+    # -- crash recovery --------------------------------------------------------
+    @staticmethod
+    def _scan(path: str) -> Tuple[List[Dict[str, Any]], int]:
+        """(intact records, byte offset where the intact prefix ends)."""
+        out: List[Dict[str, Any]] = []
+        if not os.path.exists(path):
+            return out, 0
+        with open(path, "rb") as fh:
+            if fh.read(len(_JOURNAL_MAGIC)) != _JOURNAL_MAGIC:
+                return out, 0  # unreadable header: treat the file as empty
+            valid_end = len(_JOURNAL_MAGIC)
+            while True:
+                head = fh.read(4)
+                if len(head) < 4:
+                    break
+                (n,) = struct.unpack("<I", head)
+                payload = fh.read(n)
+                if len(payload) < n:
+                    break  # torn final record: crash mid-append, not acknowledged
+                try:
+                    out.append(unpack(payload))
+                except (ValueError, struct.error):
+                    break
+                valid_end += 4 + n
+        return out, valid_end
+
+    @staticmethod
+    def read_records(path: str) -> List[Dict[str, Any]]:
+        """All intact records in an on-disk journal, append order."""
+        return WriteBackJournal._scan(path)[0]
+
+    def recover(self) -> Dict[str, Dict[str, Any]]:
+        """Load journaled updates into the pending buffer (merged per path)."""
+        if self.path is None:
+            return {}
+        records = self.read_records(self.path)
+        with self._lock:
+            for rec in records:
+                self._pending.setdefault(rec["path"], {}).update(rec.get("kw") or {})
+                epoch = int(rec.get("epoch") or 0)
+                if epoch > self._fences.get(rec["path"], 0):
+                    self._fences[rec["path"]] = epoch
+            if records:
+                self._file_dirty = True
+                if self._first_dirty_t is None:
+                    self._first_dirty_t = time.time()
+        return self.pending()
+
+    def recovered_fences(self) -> Dict[str, int]:
+        """Per-path witnessed-epoch fences of the recovered records: a replay
+        must not apply over a row newer than what the dead client had seen."""
+        with self._lock:
+            return dict(self._fences)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None

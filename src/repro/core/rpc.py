@@ -212,21 +212,41 @@ class RpcStats:
 
 
 class RpcServer:
-    """Dispatches packed requests onto a service object's public methods."""
+    """Dispatches packed requests onto a service object's public methods.
 
-    def __init__(self, service: Any, name: str = "service"):
+    Envelopes are epoch-stamped when the server carries a ``clock`` (the
+    DTN's Lamport :class:`~repro.core.replication.EpochClock`): request
+    epochs are observed (merge rule) and every reply carries the server's
+    current epoch, so clients accumulate a per-server high-water mark —
+    the freshness bar replica reads are judged against.  ``down`` simulates
+    a crashed/partitioned DTN: every request fails with an RpcError.
+    """
+
+    def __init__(self, service: Any, name: str = "service", clock: Any = None):
         self._service = service
         self.name = name
+        self.clock = clock
+        self.down = False
         self._lock = threading.Lock()
 
     def handle(self, request: bytes) -> bytes:
+        if self.down:
+            return pack({"ok": False, "error": f"ServiceDown: {self.name} is unreachable"})
         req = unpack(request)
+        if self.clock is not None and req.get("epoch"):
+            self.clock.observe(int(req["epoch"]))
         if "batch" in req:
             # One channel round-trip, N operations, executed strictly in list
             # order on this server.  Each op gets its own ok/error slot so one
             # failure neither aborts the batch nor masks later results.
-            return pack({"ok": True, "results": [self._dispatch(op) for op in req["batch"]]})
-        return pack(self._dispatch(req))
+            reply = {"ok": True, "results": [self._dispatch(op) for op in req["batch"]]}
+        else:
+            reply = self._dispatch(req)
+        if self.clock is not None:
+            # the freshness bar: this origin's own last mutation, not the
+            # merged Lamport value (see EpochClock.last_local)
+            reply["epoch"] = self.clock.last_local()
+        return pack(reply)
 
     def _dispatch(self, req: Dict[str, Any]) -> Dict[str, Any]:
         method = req["method"]
@@ -281,6 +301,9 @@ class RpcClient:
         self._server = server
         self.channel = channel
         self.stats = RpcStats()
+        #: highest epoch witnessed in this server's reply envelopes — the
+        #: session-consistency bar for replica reads of rows it originates
+        self.last_epoch = 0
 
     def _round_trip(
         self, message: Dict[str, Any], n_ops: int, defer_wire: bool = False
@@ -295,6 +318,8 @@ class RpcClient:
         accurate under this container's timer granularity + GIL).
         """
         t0 = time.perf_counter()
+        if self.last_epoch:
+            message = dict(message, epoch=self.last_epoch)
         request = pack(message)
         t1 = time.perf_counter()
         if defer_wire:
@@ -309,6 +334,8 @@ class RpcClient:
         t2 = time.perf_counter()
         resp = unpack(response)
         t3 = time.perf_counter()
+        if resp.get("epoch"):
+            self.last_epoch = max(self.last_epoch, int(resp["epoch"]))
 
         self.stats.calls += 1
         self.stats.ops += n_ops

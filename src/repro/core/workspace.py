@@ -79,6 +79,10 @@ class Workspace:
         write_back: bool = False,
         max_inflight: int = 8,
         cache_entries: int = 4096,
+        journal_path: Optional[str] = None,
+        wb_max_pending: Optional[int] = None,
+        wb_max_age_s: Optional[float] = None,
+        prefer_replica: bool = False,
     ):
         if extraction_mode not in ExtractionMode.ALL:
             raise ValueError(f"unknown extraction mode {extraction_mode!r}")
@@ -89,15 +93,23 @@ class Workspace:
         self.attr_filter = attr_filter
         self.pipeline = pipeline
         self.write_back = write_back
+        self.prefer_replica = prefer_replica
         # All service interaction goes through the metadata plane: pooled
-        # per-DTN clients, batched RPC, bounded scatter-gather, attr cache.
-        self.plane = ServicePlane(
-            collab,
-            home_dc,
+        # per-DTN clients, batched RPC, bounded scatter-gather, attr cache,
+        # and (write_back) the crash-recoverable journal with count/age
+        # flush thresholds.
+        plane_kwargs: Dict[str, Any] = dict(
             max_inflight=max_inflight,
             cache_entries=cache_entries,
             write_back=write_back,
+            journal_path=journal_path,
+            prefer_replica=prefer_replica,
         )
+        if wb_max_pending is not None:
+            plane_kwargs["wb_max_pending"] = wb_max_pending
+        if wb_max_age_s is not None:
+            plane_kwargs["wb_max_age_s"] = wb_max_age_s
+        self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
         self._data_channels: Dict[str, Channel] = {
             dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
         }
@@ -220,29 +232,69 @@ class Workspace:
         dtn.backend.mkdir(path, owner=self.collaborator)
         self.plane.note_entry(entry)
 
+    def _merge_listing(self, per_dtn: List[Any]) -> List[Dict[str, Any]]:
+        """Merge per-DTN listing replies; under replication the same path may
+        come back from several DTNs, so keep the (epoch, origin)-newest row
+        and tag rows served by a DTN other than the path's owner."""
+        best: Dict[str, Dict[str, Any]] = {}
+        for idx, entries in enumerate(per_dtn):
+            for e in entries or []:
+                stamp = (e.get("epoch", 0), e.get("origin", -1))
+                cur = best.get(e["path"])
+                if cur is None or stamp > (cur.get("epoch", 0), cur.get("origin", -1)):
+                    if idx != self.plane.owner(e["path"]):
+                        e = dict(e)
+                        e["replica"] = {"dtn": idx, "origin": self.plane.owner(e["path"])}
+                    best[e["path"]] = e
+        return [best[p] for p in sorted(best)]
+
+    def _replica_listing(self, method: str, kw: Dict[str, Any]) -> Optional[List[Any]]:
+        """Home-DC-only listing, or None when a replica cannot prove it has
+        applied every epoch this mount has witnessed (session consistency —
+        the caller then falls back to the full fan-out).  Each reply carries
+        the shard's applied watermarks for the freshness judgement."""
+        if not (self.prefer_replica and self.collab.replication_enabled and self.plane.local_dtns):
+            return None
+        per_dtn = self.plane.scatter(
+            "meta", f"{method}_replica",
+            per_dtn_kwargs={i: dict(kw) for i in self.plane.local_dtns},
+        )
+        bars = self.plane.seen_epochs()
+        merged: List[Any] = [None] * len(per_dtn)
+        for i in self.plane.local_dtns:
+            reply = per_dtn[i] or {}
+            applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
+            if not all(
+                applied.get(o, 0) >= bar
+                for o, bar in bars.items()
+                if bar > 0 and o != i
+            ):
+                self.plane.replica_stale_fallbacks += 1
+                return None
+            merged[i] = reply.get("entries")
+        return merged
+
     def ls(self, path: str = "/") -> List[Dict[str, Any]]:
-        """Scatter-gather listings from every DTN (§III-B1), bounded fan-out."""
+        """Scatter-gather listings (§III-B1), bounded fan-out; with
+        ``prefer_replica`` only the home-DC replicas are contacted (full
+        fan-out fallback when they are stale)."""
         path = _norm(path)
         self.plane.flush()  # write-back entries must be visible to listings
-        per_dtn = self.plane.scatter(
-            "meta", "list_dir", {"parent": path, "requester": self.collaborator}
-        )
-        out: List[Dict[str, Any]] = []
-        for entries in per_dtn:
-            out.extend(entries or [])
-        return sorted(out, key=lambda e: e["path"])
+        kw = {"parent": path, "requester": self.collaborator}
+        per_dtn = self._replica_listing("list_dir", kw)
+        if per_dtn is None:
+            per_dtn = self.plane.scatter("meta", "list_dir", kw)
+        return self._merge_listing(per_dtn)
 
     def find(self, prefix: str = "/") -> List[Dict[str, Any]]:
         """Recursive listing (global view of all shared datasets)."""
         prefix = _norm(prefix)
         self.plane.flush()
-        per_dtn = self.plane.scatter(
-            "meta", "list_all", {"requester": self.collaborator, "prefix": prefix}
-        )
-        out: List[Dict[str, Any]] = []
-        for entries in per_dtn:
-            out.extend(entries or [])
-        return sorted(out, key=lambda e: e["path"])
+        kw = {"requester": self.collaborator, "prefix": prefix}
+        per_dtn = self._replica_listing("list_all", kw)
+        if per_dtn is None:
+            per_dtn = self.plane.scatter("meta", "list_all", kw)
+        return self._merge_listing(per_dtn)
 
     def delete(self, path: str) -> None:
         """Owner-only removal (the paper defers remote removal; §III-B1)."""
@@ -293,13 +345,38 @@ class Workspace:
         Each shard receives ONE RPC carrying every predicate and replies with
         its per-predicate path sets plus the rows of its local matches; the
         plane fans the shards out concurrently and the file sets are merged
-        centrally (union over shards, intersection over predicates) — correct
-        even when one file's rows span shards, in one round-trip per shard.
+        centrally (union over shards, intersection over predicates, in
+        fixed-size tree-merge groups) — correct even when one file's rows
+        span shards, in one round-trip per shard.
+
+        With ``prefer_replica`` and the replication tier running, the whole
+        query is first tried against ONE home-DC replica shard — it holds a
+        replica of every origin's rows, so a single intra-DC round-trip
+        answers the query.  The reply carries the shard's applied-epoch map;
+        if any origin this client has witnessed is not yet applied there,
+        the result may miss those writes and the query falls back to the
+        full fan-out.
         """
         plan = plan_query(query)
-        per_dtn = self.plane.scatter(
-            "sds", "scatter_query", {"predicates": plan.predicate_messages()}
-        )
+        msg = {"predicates": plan.predicate_messages()}
+        if self.prefer_replica and self.collab.replication_enabled and self.plane.local_dtns:
+            nearest = self.plane.local_dtns[0]
+            reply = self.plane.sds_call(nearest, "scatter_query", **msg)
+            applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
+            fresh = all(
+                applied.get(i, 0) >= bar
+                for i, bar in self.plane.seen_epochs().items()
+                if bar > 0 and i != nearest
+            )
+            if fresh:
+                paths = set(plan.merge([reply["matches"]]))
+                return [
+                    {"path": row["path"], "attrs": row["attrs"], "replica": {"dtn": nearest}}
+                    for row in reply["rows"]
+                    if row["path"] in paths
+                ]
+            self.plane.replica_stale_fallbacks += 1
+        per_dtn = self.plane.scatter("sds", "scatter_query", msg)
         paths = set(plan.merge([r["matches"] for r in per_dtn]))
         if not paths:
             return []
@@ -322,6 +399,12 @@ class Workspace:
 
     def close(self) -> None:
         self.plane.close()
+
+    def crash(self) -> None:
+        """Simulate this mount dying mid-session (nothing flushed); a new
+        Workspace with the same ``journal_path`` recovers the acknowledged
+        write-back updates and commits them on its next flush."""
+        self.plane.crash()
 
 
 class NativeSession:

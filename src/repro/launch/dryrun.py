@@ -31,6 +31,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis_dict, set_mesh
 from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
 from repro.distributed.sharding import (
     batch_shardings,
@@ -127,7 +128,7 @@ def run_cell(
     model = Model(cfg)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             opt = AdamW(AdamWConfig())
             n_pods = mesh.shape.get("pod", 0) if cross_pod != "auto" else 0
@@ -180,7 +181,7 @@ def run_cell(
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
 
     n_params = _count_params_abstract(model)

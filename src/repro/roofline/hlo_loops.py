@@ -18,11 +18,32 @@ from typing import Dict, List, Tuple
 __all__ = ["region_multipliers", "split_regions"]
 
 _REGION_START = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+# operands may be bare (%tuple.2) or typed ((s32[], f32[...]{1,0}) %tuple.2)
 _WHILE_RE = re.compile(
-    r"=\s*[^=]*while\(\s*%?(?P<init>[\w.\-]+)\s*\),\s*condition=%?(?P<cond>[\w.\-]+),\s*body=%?(?P<body>[\w.\-]+)"
+    r"=\s*[^=]*while\((?P<init>.*?)\),\s*condition=%?(?P<cond>[\w.\-]+),\s*body=%?(?P<body>[\w.\-]+)"
 )
 _CONST_RE = re.compile(r"%?(?P<name>[\w.\-]+)\s*=\s*s32\[\]\s*constant\((?P<val>\d+)\)")
 _TUPLE_RE = re.compile(r"%?(?P<name>[\w.\-]+)\s*=\s*\([^=]*\)\s*tuple\((?P<args>[^)]*)\)")
+
+
+def _operand_names(argstr: str) -> List[str]:
+    """Instruction-operand names out of an argument list, typed or bare.
+
+    Splitting on commas may shear typed shapes ("f32[4,64]{1,0} %x" splits
+    inside the layout braces); only fragments whose last token is a %name —
+    or a bare word in untyped HLO — name an operand.
+    """
+    names: List[str] = []
+    for frag in argstr.split(","):
+        toks = frag.strip().split()
+        if not toks:
+            continue
+        tok = toks[-1]
+        if tok.startswith("%"):
+            names.append(tok.lstrip("%"))
+        elif re.fullmatch(r"[\w.\-]+", tok):
+            names.append(tok)
+    return names
 
 
 def split_regions(hlo_text: str) -> Dict[str, List[str]]:
@@ -47,7 +68,7 @@ def split_regions(hlo_text: str) -> Dict[str, List[str]]:
     return regions
 
 
-_COPY_RE = re.compile(r"=\s*s32\[\]\s*copy\(\s*%?(?P<src>[\w.\-]+)\s*\)")
+_COPY_RE = re.compile(r"=\s*s32\[\]\s*copy\(\s*(?:s32\[\]\s*)?%?(?P<src>[\w.\-]+)\s*\)")
 
 
 def _resolve_const(
@@ -68,7 +89,7 @@ def _resolve_const(
 
 
 _GTE_RE = re.compile(
-    r"=\s*s32\[\]\s*get-tuple-element\(\s*%?[\w.\-]+\s*\),\s*index=(?P<idx>\d+)"
+    r"=\s*s32\[\]\s*get-tuple-element\(.*\),\s*index=(?P<idx>\d+)"
 )
 _ROOT_OPS_RE = re.compile(r"ROOT\s+%?[\w.\-]+\s*=\s*pred\[\][^(]*\((?P<args>[^)]*)\)")
 
@@ -98,7 +119,7 @@ def _trip_count(
     init_args: List[str] = []
     m = _TUPLE_RE.search(lines_by_name.get(init_name, ""))
     if m:
-        init_args = [a.strip().lstrip("%") for a in m.group("args").split(",")]
+        init_args = _operand_names(m.group("args"))
 
     def resolve_operand(name: str) -> int | None:
         # constant / copy-of-constant, in cond region or globally
@@ -121,8 +142,7 @@ def _trip_count(
         r = _ROOT_OPS_RE.search(line)
         if not r:
             continue
-        for arg in r.group("args").split(","):
-            arg = arg.strip().lstrip("%")
+        for arg in _operand_names(r.group("args")):
             v = resolve_operand(arg)
             if v is not None:
                 vals.append(v)
@@ -158,8 +178,10 @@ def region_multipliers(hlo_text: str) -> Dict[str, int]:
         for line in lines:
             mw = _WHILE_RE.search(line)
             if mw:
+                init_names = _operand_names(mw.group("init"))
                 trips = _trip_count(
-                    mw.group("init"), mw.group("cond"), lines_by_name, consts, regions
+                    init_names[-1] if init_names else "", mw.group("cond"),
+                    lines_by_name, consts, regions,
                 )
                 edges[name].append((mw.group("body"), trips))
                 edges[name].append((mw.group("cond"), trips))

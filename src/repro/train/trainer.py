@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.data.pipeline import ShardedPipeline, WorkStealingBalancer
 from repro.distributed.sharding import batch_shardings
 from repro.optim.adamw import AdamW
@@ -127,7 +128,7 @@ class Trainer:
         """Run to global step ``n_steps`` with restart-on-failure."""
         restarts = 0
         t_loop = time.perf_counter()
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             while self.current_step() < n_steps:
                 step = self.current_step()
                 try:

@@ -80,14 +80,19 @@ def test_pipeline_futures_resolve_on_flush(collab):
 # -- five-op write: pipelined == serial -----------------------------------------
 
 def _dump_rows(collab):
-    """All files-table rows across every shard, timestamps masked."""
+    """All files-table rows across every shard, timestamps masked.
+
+    ``epoch`` is a logical timestamp (ticks per mutation, so write-back's
+    reordered flush commits legitimately produce different values than the
+    serial sequence) and is masked like the wall-clock columns.
+    """
     rows = []
     for dtn in collab.dtns:
         for row in dtn.metadata_shard.execute(
             f"SELECT {','.join(_FILE_COLS)} FROM files ORDER BY path"
         ):
             entry = dict(zip(_FILE_COLS, row))
-            entry["ctime"] = entry["mtime"] = "<t>"
+            entry["ctime"] = entry["mtime"] = entry["epoch"] = "<t>"
             rows.append((dtn.dtn_id, tuple(entry.items())))
     return rows
 

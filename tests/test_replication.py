@@ -1,0 +1,464 @@
+"""Replicated metadata tier: log/pump convergence, epochs, replica reads,
+crash-recoverable write-back journal.
+
+The contracts under test:
+
+- every DTN converges to byte-identical metadata/discovery tables after a
+  mixed concurrent cross-DC workload (LWW by (epoch, origin));
+- replica reads serve only when the replica meets the reader's witnessed
+  epochs (session consistency) and fall back to the origin otherwise;
+- a crashed DTN recovers purely through pump retry; a crashed *client*
+  loses zero acknowledged write-back updates thanks to the journal.
+"""
+
+import os
+
+import pytest
+
+from repro.core import (
+    Collaboration,
+    EpochClock,
+    MEU,
+    NativeSession,
+    ReplicationLog,
+    Workspace,
+    WriteBackJournal,
+)
+from repro.core.metadata import _FILE_COLS
+from repro.core.rpc import RpcError
+
+
+def _replicated_collab(**pump_kwargs):
+    c = Collaboration()
+    c.add_datacenter("dc0", n_dtns=2)
+    c.add_datacenter("dc1", n_dtns=2)
+    kw = dict(max_age_s=0.02, poll_s=0.005)
+    kw.update(pump_kwargs)
+    c.start_replication(**kw)
+    return c
+
+
+@pytest.fixture()
+def rcollab():
+    c = _replicated_collab()
+    yield c
+    c.close()
+
+
+def _meta_tables(collab):
+    return [
+        dtn.metadata_shard.execute(
+            f"SELECT {','.join(_FILE_COLS)} FROM files ORDER BY path, origin, epoch"
+        )
+        for dtn in collab.dtns
+    ]
+
+
+def _attr_tables(collab):
+    return [
+        dtn.discovery_shard.execute(
+            "SELECT path, attr_name, attr_type, value_int, value_real, value_text,"
+            " origin, epoch FROM attributes ORDER BY path, origin, attr_name, epoch"
+        )
+        for dtn in collab.dtns
+    ]
+
+
+# -- primitives -----------------------------------------------------------------
+
+def test_epoch_clock_lamport_rules():
+    clk = EpochClock()
+    assert clk.tick() == 1 and clk.tick() == 2
+    clk.observe(10)
+    assert clk.current() == 10
+    clk.observe(5)  # merges never go backwards
+    assert clk.current() == 10
+    assert clk.tick() == 11
+
+
+def test_replication_log_cursors_and_truncation():
+    log = ReplicationLog()
+    seqs = [log.append({"service": "meta", "op": "upsert", "epoch": i}) for i in (1, 2, 3)]
+    assert seqs == [1, 2, 3]
+    assert [r["epoch"] for r in log.since(1)] == [2, 3]
+    assert log.pending_for(0) == 3 and log.pending_for(3) == 0
+    log.truncate_upto(2)
+    # cursor arithmetic survives truncation
+    assert [r["epoch"] for r in log.since(2)] == [3]
+    assert log.last_seq() == 3
+    assert log.append({"service": "meta", "op": "upsert", "epoch": 4}) == 4
+
+
+def test_rpc_envelopes_carry_epochs(rcollab):
+    ws = Workspace(rcollab, "alice", "dc0")
+    p = "/epoch/a.bin"
+    owner = ws.plane.owner(p)
+    assert ws.plane.seen_epoch(owner) == 0
+    ws.write(p, b"x")
+    bar = ws.plane.seen_epoch(owner)
+    assert bar > 0  # the write's reply envelope carried the origin's epoch
+    ws.write(p, b"xy")
+    assert ws.plane.seen_epoch(owner) > bar  # and it advances per mutation
+    ws.close()
+
+
+# -- convergence ----------------------------------------------------------------
+
+def test_concurrent_cross_dc_updates_converge(rcollab):
+    """Mixed workload from both DCs (disjoint + same-path updates): every
+    DTN must end byte-identical, the overlapping path at its last write."""
+    alice = Workspace(rcollab, "alice", "dc0")
+    bob = Workspace(rcollab, "bob", "dc1")
+    for i in range(16):
+        alice.write(f"/mix/a{i}.bin", b"a" * (i + 1))
+        bob.write(f"/mix/b{i}.bin", b"b" * (i + 1))
+    # interleaved updates to the same paths (owner serializes, log replays)
+    for size in (3, 7, 11):
+        alice.write("/mix/shared.bin", b"s" * size)
+        bob.write("/mix/shared.bin", b"t" * (size + 1))
+    assert rcollab.quiesce_replication()
+    tables = _meta_tables(rcollab)
+    assert all(t == tables[0] for t in tables)
+    # every DTN agrees on the final shared row (bob's was last)
+    assert alice.stat("/mix/shared.bin")["size"] == 12
+    alice.close()
+    bob.close()
+
+
+def test_discovery_rows_replicate_and_converge(rcollab):
+    import numpy as np
+
+    ws = Workspace(rcollab, "alice", "dc0", extraction_mode="inline-sync")
+    for i in range(8):
+        ws.write_scidata(
+            f"/sci/f{i}.sci", {"x": np.zeros(2, np.float32)}, {"lvl": i}
+        )
+    ws.tag("/sci/f0.sci", "quality", "gold")
+    assert rcollab.quiesce_replication()
+    tables = _attr_tables(rcollab)
+    assert all(t == tables[0] for t in tables) and len(tables[0]) > 0
+
+
+def test_unlink_replicates_and_tombstones(rcollab):
+    alice = Workspace(rcollab, "alice", "dc0")
+    alice.write("/gone/x.bin", b"x")
+    assert rcollab.quiesce_replication()
+    alice.delete("/gone/x.bin")
+    assert rcollab.quiesce_replication()
+    for dtn in rcollab.dtns:
+        rows = dtn.metadata_shard.execute(
+            "SELECT 1 FROM files WHERE path=?", ("/gone/x.bin",)
+        )
+        assert rows == [], f"dtn{dtn.dtn_id} still lists the unlinked row"
+    alice.close()
+
+
+def test_lww_apply_is_idempotent_under_replay(rcollab):
+    """Re-delivering an origin's records (duplicate drain) changes nothing."""
+    alice = Workspace(rcollab, "alice", "dc0")
+    for i in range(6):
+        alice.write(f"/dup/d{i}.bin", b"d" * (i + 1))
+    assert rcollab.quiesce_replication()
+    before = _meta_tables(rcollab)
+    origin = rcollab.dtns[0]
+    records = origin.replication_log.since(0)
+    if not records:  # the pump may have truncated; rebuild one update record
+        records = [
+            {
+                "service": "meta",
+                "op": "update",
+                "path": "/dup/d0.bin",
+                "epoch": 1,  # stale epoch: must lose LWW everywhere
+                "origin": 0,
+                "size": 999,
+                "mtime": 0.0,
+                "sync": 1,
+            }
+        ]
+    for dtn in rcollab.dtns[1:]:
+        dtn.metadata.apply_replicated([r for r in records if r.get("service") == "meta"])
+    assert _meta_tables(rcollab) == before
+    alice.close()
+
+
+# -- replica reads ---------------------------------------------------------------
+
+def test_stat_served_from_nearest_replica_with_tag(rcollab):
+    alice = Workspace(rcollab, "alice", "dc0")
+    bob = Workspace(rcollab, "bob", "dc1", prefer_replica=True)
+    paths = [f"/rr/f{i}.bin" for i in range(12)]
+    for p in paths:
+        alice.write(p, b"z")
+    assert rcollab.quiesce_replication()
+    remote_owned = [p for p in paths if rcollab.dtns[bob.plane.owner(p)].dc_id != "dc1"]
+    assert remote_owned
+    e = bob.stat(remote_owned[0])
+    assert e is not None and e["size"] == 1
+    assert e["replica"]["dtn"] in bob.plane.local_dtns
+    assert e["replica"]["behind"] == 0
+    assert bob.plane.replica_hits >= 1
+    alice.close()
+    bob.close()
+
+
+def test_stale_replica_falls_back_to_origin():
+    """With pumps stopped the replica cannot satisfy the reader's witnessed
+    epochs, so the read must fall back to the origin and stay correct."""
+    c = _replicated_collab()
+    c.stop_replication()  # logs accumulate, nothing ships
+    alice = Workspace(c, "alice", "dc0")
+    bob = Workspace(c, "bob", "dc1", prefer_replica=True)
+    # pick a path owned in dc0 so bob's nearest replica is NOT the origin
+    path = next(
+        f"/stale/f{i}.bin" for i in range(64)
+        if c.dtns[alice.plane.owner(f"/stale/f{i}.bin")].dc_id == "dc0"
+    )
+    alice.write(path, b"fresh")
+    # bob must witness the origin's epoch for the session bar to matter:
+    # any call to that DTN carries it in the envelope
+    owner = bob.plane.owner(path)
+    bob.plane.meta_call(owner, "lookup", path=path)
+    assert bob.plane.seen_epoch(owner) > 0
+    bob.plane.cache.pop(path)
+    e = bob.stat(path)
+    assert e is not None and e["size"] == 5  # correct despite stale replicas
+    assert "replica" not in e  # served by the origin, not a replica
+    assert bob.plane.replica_stale_fallbacks >= 1
+    c.close()
+
+
+def test_replica_local_search_single_rpc(rcollab):
+    import numpy as np
+
+    alice = Workspace(rcollab, "alice", "dc0", extraction_mode="inline-sync")
+    bob = Workspace(rcollab, "bob", "dc1", prefer_replica=True)
+    for i in range(6):
+        alice.write_scidata(
+            f"/qs/f{i}.sci", {"x": np.zeros(2, np.float32)}, {"grp": i % 2}
+        )
+    assert rcollab.quiesce_replication()
+    calls_before = bob.rpc_stats()["calls"]
+    rows = bob.search("grp = 0")
+    assert [r["path"] for r in rows] == [f"/qs/f{i}.sci" for i in (0, 2, 4)]
+    assert all(r["replica"]["dtn"] in bob.plane.local_dtns for r in rows)
+    # the whole conjunction + gather was ONE intra-DC round-trip
+    assert bob.rpc_stats()["calls"] - calls_before == 1
+    alice.close()
+    bob.close()
+
+
+def test_ls_falls_back_when_replicas_stale():
+    """A replica-local listing must not hide the mount's own acknowledged
+    writes: with pumps stopped the listing falls back to the full fan-out."""
+    c = _replicated_collab()
+    c.stop_replication()
+    ws = Workspace(c, "alice", "dc1", prefer_replica=True)
+    # a path owned by a dc0 DTN: with pumps dead, dc1 replicas never see it
+    path = next(
+        f"/lsf/f{i}.bin" for i in range(64)
+        if c.dtns[ws.plane.owner(f"/lsf/f{i}.bin")].dc_id == "dc0"
+    )
+    ws.write(path, b"mine")
+    listing = ws.ls("/lsf")
+    assert [e["path"] for e in listing] == [path]  # own write always visible
+    assert ws.plane.replica_stale_fallbacks >= 1
+    c.close()
+
+
+def test_replicated_subtree_unlink_commutes_with_child_upsert(rcollab):
+    """Delivery order of a parent unlink vs a racing child upsert must not
+    diverge replicas: the tombstone covers the whole subtree."""
+    import time as _time
+
+    alice = Workspace(rcollab, "alice", "dc0")
+    alice.mkdir("/race")
+    alice.write("/race/a.bin", b"x")
+    assert rcollab.quiesce_replication()
+    # forge the race: an unlink record (newer) and a child-upsert record
+    # (older) delivered in OPPOSITE orders to two replicas
+    origin_del = rcollab.dtns[0].metadata
+    epoch_del = rcollab.dtns[0].clock.current() + 10
+    unlink_rec = {"service": "meta", "op": "unlink", "path": "/race",
+                  "epoch": epoch_del, "origin": 0}
+    child_entry = {
+        "path": "/race/late.bin", "name": "late.bin", "parent": "/race",
+        "size": 1, "owner": "bob", "dc_id": "dc1", "dtn_id": 2, "ns_id": 0,
+        "sync": 1, "is_dir": 0, "ctime": _time.time(), "mtime": _time.time(),
+        "path_hash": "00", "epoch": epoch_del - 1, "origin": 2,
+    }
+    upsert_rec = {"service": "meta", "op": "upsert", "entries": [child_entry],
+                  "epoch": epoch_del - 1, "origin": 2}
+    r1, r2 = rcollab.dtns[1].metadata, rcollab.dtns[3].metadata
+    r1.apply_replicated([unlink_rec, upsert_rec])  # unlink first
+    r2.apply_replicated([upsert_rec, unlink_rec])  # upsert first
+    rows1 = r1.shard.execute("SELECT path FROM files WHERE path LIKE '/race%' ORDER BY path")
+    rows2 = r2.shard.execute("SELECT path FROM files WHERE path LIKE '/race%' ORDER BY path")
+    assert rows1 == rows2 == []  # both orders converge to "deleted"
+    alice.close()
+
+
+def test_ls_merges_replicas_without_duplicates(rcollab):
+    alice = Workspace(rcollab, "alice", "dc0")
+    bob = Workspace(rcollab, "bob", "dc1", prefer_replica=True)
+    for i in range(10):
+        alice.write(f"/lsr/f{i}.bin", b"1")
+    assert rcollab.quiesce_replication()
+    listing = bob.ls("/lsr")
+    assert [e["name"] for e in listing] == [f"f{i}.bin" for i in range(10)]
+    # replica-local listing touched only home-DC DTNs, rows tagged
+    assert any("replica" in e for e in listing)
+    alice.close()
+    bob.close()
+
+
+# -- DTN crash / restart ----------------------------------------------------------
+
+def test_dtn_crash_restart_recovers_via_pump_retry(rcollab):
+    alice = Workspace(rcollab, "alice", "dc0")
+    victim = 3
+    rcollab.crash_dtn(victim)
+    # writes owned by the victim fail loudly; the rest of the plane works
+    owned = [p for p in (f"/cr/o{i}.bin" for i in range(64)) if alice.plane.owner(p) == victim]
+    with pytest.raises(RpcError, match="unreachable"):
+        alice.write(owned[0], b"x")
+    survivors = [p for p in (f"/cr/s{i}.bin" for i in range(64)) if alice.plane.owner(p) != victim][:6]
+    for p in survivors:
+        alice.write(p, b"ok")
+    rcollab.restart_dtn(victim)
+    assert rcollab.quiesce_replication()
+    tables = _meta_tables(rcollab)
+    assert all(t == tables[0] for t in tables)
+    # the victim now serves the rows it missed while down
+    row = rcollab.dtns[victim].metadata.getattr(survivors[0])
+    assert row is not None and row["size"] == 2
+    alice.close()
+
+
+# -- write-back journal ------------------------------------------------------------
+
+def test_journal_thresholds_fire_count_and_age(tmp_path):
+    j = WriteBackJournal(str(tmp_path / "wb.j"), max_pending=3, max_age_s=9e9)
+    j.append("/a", {"size": 1})
+    j.append("/b", {"size": 2})
+    assert not j.should_flush()
+    j.append("/c", {"size": 3})
+    assert j.should_flush()  # count threshold
+    j.mark_flushed()
+    assert j.pending_count() == 0 and not j.should_flush()
+    j2 = WriteBackJournal(str(tmp_path / "wb2.j"), max_pending=10_000, max_age_s=0.0)
+    j2.append("/x", {"size": 1})
+    assert j2.should_flush()  # age threshold (zero age bound)
+    j.close()
+    j2.close()
+
+
+def test_journal_replay_after_client_crash(collab, tmp_path):
+    """Acknowledged write-back updates survive the writing client dying."""
+    jp = str(tmp_path / "crash.journal")
+    w = Workspace(
+        collab, "dave", "dc0", write_back=True, journal_path=jp,
+        wb_max_pending=10_000, wb_max_age_s=9e9,  # nothing auto-flushes
+    )
+    w.write("/jr/a.bin", b"0123456789")
+    w.write("/jr/b.bin", b"01234")
+    w.crash()  # no flush ran; the journal is the only record
+    viewer = Workspace(collab, "eve", "dc1")
+    assert viewer.stat("/jr/a.bin")["size"] == 0  # origin row still pre-flush
+    # successor mount recovers the journal and commits on flush
+    w2 = Workspace(collab, "dave", "dc0", write_back=True, journal_path=jp)
+    assert w2.flush() == 2  # zero acknowledged updates lost
+    assert viewer.stat("/jr/a.bin")["size"] == 10
+    assert viewer.stat("/jr/b.bin")["size"] == 5
+    # the journal is spent: a second recovery replays nothing
+    w3 = Workspace(collab, "dave", "dc0", write_back=True, journal_path=jp)
+    assert w3.flush() == 0
+    w2.close()
+    w3.close()
+    viewer.close()
+
+
+def test_journal_discards_torn_final_record(tmp_path):
+    jp = str(tmp_path / "torn.journal")
+    j = WriteBackJournal(jp)
+    j.append("/whole", {"size": 7})
+    j.close()
+    with open(jp, "ab") as fh:
+        fh.write(b"\x40\x00\x00\x00garbage-that-is-too-short")
+    records = WriteBackJournal.read_records(jp)
+    assert [r["path"] for r in records] == ["/whole"]  # torn tail dropped
+
+
+def test_failed_flush_keeps_journal_and_retries(collab, tmp_path):
+    """A flush that dies on the wire must leave the acknowledged updates
+    recoverable: dirty set restored, journal intact, later retry commits."""
+    jp = str(tmp_path / "retry.journal")
+    ws = Workspace(
+        collab, "alice", "dc0", write_back=True, journal_path=jp,
+        wb_max_pending=10_000, wb_max_age_s=9e9,
+    )
+    ws.write("/retry/a.bin", b"0123456789")
+    owner = ws.plane.owner("/retry/a.bin")
+    collab.crash_dtn(owner)
+    with pytest.raises(RpcError):
+        ws.flush()
+    # nothing was lost to the failed commit
+    assert ws.plane.journal.pending_count() == 1
+    assert WriteBackJournal.read_records(jp)
+    collab.restart_dtn(owner)
+    assert ws.flush() == 1
+    viewer = Workspace(collab, "bob", "dc1")
+    assert viewer.stat("/retry/a.bin")["size"] == 10
+    ws.close()
+    viewer.close()
+
+
+def test_successor_appends_after_torn_tail_stay_recoverable(tmp_path):
+    """Opening a journal with a torn tail truncates it, so the successor's
+    own acknowledged records are readable by the *next* recovery too."""
+    jp = str(tmp_path / "torn2.journal")
+    j = WriteBackJournal(jp)
+    j.append("/first", {"size": 1})
+    j.close()
+    with open(jp, "ab") as fh:
+        fh.write(b"\x40\x00\x00\x00short")  # predecessor died mid-append
+    j2 = WriteBackJournal(jp)
+    assert list(j2.recover()) == ["/first"]
+    j2.append("/second", {"size": 2})
+    j2.close()
+    assert [r["path"] for r in WriteBackJournal.read_records(jp)] == ["/first", "/second"]
+
+
+def test_recovered_replay_does_not_clobber_newer_write(collab, tmp_path):
+    """The journaled epoch fences a replay: a write committed AFTER the
+    crash (whose invalidation the dead mount never saw) must win."""
+    jp = str(tmp_path / "fence.journal")
+    w = Workspace(
+        collab, "dave", "dc0", write_back=True, journal_path=jp,
+        wb_max_pending=10_000, wb_max_age_s=9e9,
+    )
+    w.write("/fence/a.bin", b"12345")  # acknowledged at size 5
+    w.crash()
+    other = Workspace(collab, "bob", "dc1")
+    other.write("/fence/a.bin", b"0123456789")  # newer row, size 10
+    w2 = Workspace(collab, "dave", "dc0", write_back=True, journal_path=jp)
+    w2.flush()  # stale replay is fenced out at the origin
+    viewer = Workspace(collab, "eve", "dc1")
+    assert viewer.stat("/fence/a.bin")["size"] == 10
+    w2.close()
+    other.close()
+    viewer.close()
+
+
+def test_count_threshold_autoflushes_in_write_path(collab):
+    ws = Workspace(
+        collab, "alice", "dc0", write_back=True,
+        wb_max_pending=4, wb_max_age_s=9e9,
+    )
+    for i in range(4):
+        ws.write(f"/auto/f{i}.bin", b"abc")
+    # the 4th deferred update crossed the count threshold -> flushed inline
+    assert ws.plane.journal.pending_count() == 0
+    viewer = Workspace(collab, "bob", "dc1")
+    assert viewer.stat("/auto/f3.bin")["size"] == 3
+    ws.close()
+    viewer.close()

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro.configs import ARCHS, smoke_variant
 from repro.configs.base import ShapeConfig
 from repro.core import Collaboration
@@ -34,7 +35,7 @@ def test_microbatch_equivalence():
     mesh = jax.make_mesh((1,), ("data",))
     s1 = build_train_step(model, opt, mesh, microbatches=1, loss_chunk=16)
     s4 = build_train_step(model, opt, mesh, microbatches=4, loss_chunk=16)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state1, m1 = s1(state1, batch)
         state4, m4 = s4(state4, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
@@ -46,6 +47,7 @@ def test_train_modes_agree_across_pods():
     out = run_multidev(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import set_mesh
         from repro.configs import ARCHS, smoke_variant
         from repro.configs.base import ShapeConfig
         from repro.models.model import Model
@@ -68,7 +70,7 @@ def test_train_modes_agree_across_pods():
             batch = model.make_batch(key, tiny)
             bs = batch_shardings(jax.eval_shape(lambda: batch), mesh)
             batch = jax.tree.map(jax.device_put, batch, bs)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 for _ in range(3):
                     state, m = step(state, batch)
             res[mode] = float(m['loss'])
