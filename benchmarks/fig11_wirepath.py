@@ -1,0 +1,307 @@
+"""Fig. 11 — cross-DC wire-path acceleration (this repo's extension).
+
+Three experiments, one per wire-path stage:
+
+1. **codec fast path** — pack throughput (MB/s) of the non-recursive flat
+   packer vs the recursive reference packer on representative metadata
+   records, plus zero-copy unpack.  The two packers are byte-identical by
+   construction (property-tested in tests/test_wirepath.py); only the
+   constant factor changes.  Claim: >=2x pack throughput.
+2. **compacted replication shipping** — an overwrite-heavy workload (the
+   same paths rewritten many times between pump drains) shipped once with
+   path compaction + delta encoding and once raw.  Replicas must converge
+   to byte-identical attribute tables either way; what changes is bytes on
+   the cross-DC wire.  Claim: >=3x bytes reduction.
+3. **shard-pruning query summaries** — 16 DTNs across 4 DCs; selective
+   attribute queries prune shards whose replicated bloom summaries prove
+   they cannot match.  Claim: >=50% of shards pruned per selective query.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import META_LAT, save_result, timed
+from repro.core import Collaboration, ExtractionMode, Workspace
+from repro.core.rpc import Channel, pack, pack_recursive, unpack
+
+CROSS_LAT = 2.5e-3  # one-way, ESnet-class (~5 ms RTT)
+N_PRUNE_DTNS = 16   # 4 DCs x 4
+
+
+def _collab(n_dcs: int, dtns_per_dc: int, **pump_kwargs) -> Collaboration:
+    def channels(from_dc: str, to_dc: str) -> Channel:
+        if from_dc == to_dc:
+            return Channel(name="intra", latency_s=META_LAT)
+        return Channel(name="cross", latency_s=CROSS_LAT, gbps=100.0)
+
+    collab = Collaboration(channel_policy=channels)
+    for i in range(n_dcs):
+        collab.add_datacenter(f"dc{i}", n_dtns=dtns_per_dc)
+    if pump_kwargs:
+        collab.start_replication(**pump_kwargs)
+    return collab
+
+
+# -- 1. codec ---------------------------------------------------------------
+def _codec_messages() -> List[dict]:
+    """Representative wire traffic: five-op batches, index rows, replies.
+
+    Deliberately excludes large bytes blobs — blob payloads are a single
+    memcpy in both packers, so including them only dilutes the structural
+    packing cost this experiment measures (and zero-copy unpack already
+    removes the copy on the receive side).
+    """
+    entry = {
+        "path": "/proj/run0042/out/file_000123.sci", "owner": "alice",
+        "dc_id": "dc0", "ns_id": 3, "is_dir": False, "sync": True,
+        "size": 134217728, "mtime": 1754500000.123456, "epoch": 98321,
+        "origin": 7,
+    }
+    return [
+        {"method": "getattr", "kwargs": {"path": entry["path"]}, "epoch": 98321},
+        {"method": "create", "kwargs": dict(entry), "epoch": 98322},
+        {"ok": True, "results": [dict(entry) for _ in range(8)], "epoch": 98322},
+        {
+            "service": "sds", "op": "index", "path": entry["path"],
+            "epoch": 98323, "origin": 7, "seq": 551,
+            "rows": [
+                ["instrument", "text", None, None, "modis"],
+                ["lvl", "int", 4, None, None],
+                ["mean_sst", "float", None, 287.15, None],
+            ],
+        },
+    ]
+
+
+def _codec_bench(repeats: int) -> Dict[str, float]:
+    msgs = _codec_messages()
+    nbytes = sum(len(pack(m)) for m in msgs)
+    for m in msgs:  # cross-check before timing: same wire bytes
+        assert pack(m) == pack_recursive(m)
+
+    def one_trial(fn) -> float:
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for m in msgs:
+                fn(m)
+        return nbytes * repeats / (time.perf_counter() - t0)
+
+    # interleaved best-of-N: both packers see the same share of scheduler
+    # noise, and max-throughput is the stable statistic on a busy host
+    trials = 5
+    fast_bps = slow_bps = 0.0
+    for _ in range(trials):
+        fast_bps = max(fast_bps, one_trial(pack))
+        slow_bps = max(slow_bps, one_trial(pack_recursive))
+    frames = [pack(m) for m in msgs]
+    unpack_bps = 0.0
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for f in frames:
+                unpack(f, copy=False)
+        unpack_bps = max(unpack_bps, nbytes * repeats / (time.perf_counter() - t0))
+    return {
+        "pack_fast_mbps": fast_bps / 1e6,
+        "pack_recursive_mbps": slow_bps / 1e6,
+        "pack_speedup": fast_bps / slow_bps,
+        "unpack_zerocopy_mbps": unpack_bps / 1e6,
+        "message_bytes": nbytes,
+    }
+
+
+# -- 2. compacted shipping --------------------------------------------------
+def _attr_snapshot(dtn) -> list:
+    return dtn.discovery_shard.execute(
+        "SELECT path, attr_name, attr_type, value_int, value_real, value_text"
+        " FROM attributes ORDER BY path, attr_name, attr_type,"
+        " value_int, value_real, value_text"
+    )
+
+
+def _shipping_bench(n_paths: int, n_rounds: int) -> Dict:
+    out: Dict = {}
+    snaps: Dict[str, list] = {}
+
+    def attrs(i: int, rnd: int) -> Dict:
+        # mostly-static attribute sets are the delta-friendly case: only
+        # `round` (plus fs.size/fs.mtime) changes between overwrites, so a
+        # +/- diff against the previously shipped version beats a full
+        # replacement row set
+        return {
+            "lvl": i, "round": rnd, "site": f"s{i % 4}",
+            "instrument": "modis", "proj": "scispace", "camp": f"c{i % 3}",
+            "res_m": 250, "qa": "pass",
+        }
+
+    for mode, compact, deltas in (("compacted", True, True), ("raw", False, False)):
+        # huge thresholds: all rounds accumulate in the log, then one manual
+        # quiesce drains — the overwrite window the compactor collapses
+        collab = _collab(2, 2, max_pending=1 << 30, max_age_s=1e9,
+                         compact=compact, deltas=deltas)
+        ws = Workspace(collab, "alice", "dc0",
+                       extraction_mode=ExtractionMode.INLINE_SYNC)
+        arrays = {"x": np.zeros(2, np.float32)}
+        for rnd in range(n_rounds):
+            for i in range(n_paths):
+                ws.write_scidata(f"/ow/f{i:04d}.sci", arrays, attrs(i, rnd))
+        assert collab.quiesce_replication(60.0)
+        # a second overwrite round drained against the now-established bases
+        # exercises the delta encoder (unchanged rows ship as +/- diffs)
+        for i in range(n_paths):
+            ws.write_scidata(f"/ow/f{i:04d}.sci", arrays, attrs(i, n_rounds))
+        assert collab.quiesce_replication(60.0)
+        stats = [d.replica_pump.stats() for d in collab.dtns]
+        tables = [_attr_snapshot(d) for d in collab.dtns]
+        out[mode] = {
+            "bytes_shipped": sum(s["bytes_shipped"] for s in stats),
+            "records_shipped": sum(s["records_shipped"] for s in stats),
+            "records_compacted": sum(s["records_compacted"] for s in stats),
+            "delta_records": sum(s["delta_records"] for s in stats),
+            "delta_refused": sum(s["delta_refused"] for s in stats),
+            "replicas_identical": all(t == tables[0] for t in tables),
+        }
+        # final LWW state must not depend on the wire encoding (mtime rows
+        # are wall-clock so only intra-run tables are comparable)
+        snaps[mode] = [r for r in tables[0] if r[1] != "fs.mtime"]
+        ws.close()
+        collab.close()
+    out["bytes_reduction"] = out["raw"]["bytes_shipped"] / out["compacted"]["bytes_shipped"]
+    out["states_equivalent"] = snaps["compacted"] == snaps["raw"]
+    return out
+
+
+# -- 3. shard pruning -------------------------------------------------------
+def _pruning_bench(n_files: int) -> Dict:
+    collab = _collab(4, N_PRUNE_DTNS // 4, max_pending=64, max_age_s=0.01,
+                     poll_s=0.005, compact=True, deltas=True)
+    ws = Workspace(collab, "alice", "dc0",
+                   extraction_mode=ExtractionMode.INLINE_SYNC)
+    arrays = {"x": np.zeros(2, np.float32)}
+    for i in range(n_files):
+        ws.write_scidata(
+            f"/pr/f{i:05d}.sci", arrays,
+            {"site": f"s{i % 12}", "lvl": i % 5, "camp": f"c{i % 3}"},
+        )
+    assert collab.quiesce_replication(60.0)
+
+    queries = [f"site = s{k}" for k in range(12)]
+    expected = [
+        sorted(f"/pr/f{i:05d}.sci" for i in range(n_files) if i % 12 == k)
+        for k in range(12)
+    ]
+
+    def run_queries() -> List[List[str]]:
+        return [ws.search_paths(q) for q in queries]
+
+    calls0 = ws.rpc_stats()["calls"]
+    pruned_t = timed(lambda: [a == e or _raise(a, e)
+                              for a, e in zip(run_queries(), expected)])
+    pruned_calls = ws.rpc_stats()["calls"] - calls0
+    pruned = ws.plane.shards_pruned
+    contacted = ws.plane.shard_contacts
+
+    # absent-value queries: the summaries can prove the conjunction empty
+    calls0 = ws.rpc_stats()["calls"]
+    for k in range(8):
+        assert ws.search_paths(f"site = missing{k}") == []
+    empty_calls = ws.rpc_stats()["calls"] - calls0
+    empty_shortcut = ws.plane.pruned_empty_queries
+
+    # reference cost: the same queries on the same cluster, pruning disabled
+    ws2 = Workspace(collab, "bob", "dc1", extraction_mode=ExtractionMode.NONE,
+                    prune_queries=False)
+    calls0 = ws2.rpc_stats()["calls"]
+    full_t = timed(lambda: [ws2.search_paths(q) for q in queries])
+    full_calls = ws2.rpc_stats()["calls"] - calls0
+    pruned_frac = pruned / max(1, pruned + contacted)
+    res = {
+        "n_dtns": len(collab.dtns),
+        "n_files": n_files,
+        "queries": len(queries),
+        "shards_pruned": pruned,
+        "shards_contacted": contacted,
+        "pruned_fraction": pruned_frac,
+        "selective_calls": pruned_calls,
+        "selective_s": pruned_t,
+        "reference_calls": full_calls,
+        "reference_s": full_t,
+        "absent_value_calls": empty_calls,
+        "empty_shortcut_queries": empty_shortcut,
+    }
+    ws.close()
+    ws2.close()
+    collab.close()
+    return res
+
+
+def _raise(got, want):
+    raise AssertionError(f"pruned query wrong: got {len(got)} want {len(want)}")
+
+
+def run(quick: bool = False) -> Dict:
+    codec = _codec_bench(repeats=400 if quick else 2000)
+    ship = _shipping_bench(n_paths=8, n_rounds=6 if quick else 10)
+    prune = _pruning_bench(n_files=24 if quick else 96)
+    out: Dict = {
+        "codec": codec,
+        "shipping": ship,
+        "pruning": prune,
+        # headline columns
+        "bytes_shipped_compacted": ship["compacted"]["bytes_shipped"],
+        "bytes_shipped_raw": ship["raw"]["bytes_shipped"],
+        "shards_pruned": prune["shards_pruned"],
+        "shards_contacted": prune["shards_contacted"],
+        "claims": {
+            "codec_2x": codec["pack_speedup"] >= 2.0,
+            "shipping_3x": ship["bytes_reduction"] >= 3.0,
+            "pruning_50pct": prune["pruned_fraction"] >= 0.5,
+            "replicas_converge": (
+                ship["compacted"]["replicas_identical"]
+                and ship["raw"]["replicas_identical"]
+                and ship["states_equivalent"]
+            ),
+        },
+    }
+    return out
+
+
+def main(quick: bool = False) -> Dict:
+    res = run(quick)
+    c = res["codec"]
+    print("fig11 wire-path acceleration:")
+    print(
+        f"  codec: fast pack {c['pack_fast_mbps']:.0f} MB/s vs recursive "
+        f"{c['pack_recursive_mbps']:.0f} MB/s (x{c['pack_speedup']:.1f}); "
+        f"zero-copy unpack {c['unpack_zerocopy_mbps']:.0f} MB/s"
+    )
+    s = res["shipping"]
+    print(
+        f"  shipping: {s['raw']['bytes_shipped']} B raw -> "
+        f"{s['compacted']['bytes_shipped']} B compacted "
+        f"(x{s['bytes_reduction']:.1f}; {s['compacted']['records_compacted']} records "
+        f"coalesced, {s['compacted']['delta_records']} deltas, "
+        f"identical={s['states_equivalent']})"
+    )
+    p = res["pruning"]
+    print(
+        f"  pruning: {p['shards_pruned']} of "
+        f"{p['shards_pruned'] + p['shards_contacted']} shard contacts pruned "
+        f"({100 * p['pruned_fraction']:.0f}%) over {p['queries']} selective queries "
+        f"at {p['n_dtns']} DTNs; {p['selective_calls']} RPCs vs "
+        f"{p['reference_calls']} unpruned; absent-value queries "
+        f"{p['absent_value_calls']} RPCs ({p['empty_shortcut_queries']} zero-fan-out)"
+    )
+    print(f"  claims: {res['claims']}")
+    save_result("fig11_wirepath", res)
+    if not all(res["claims"].values()):
+        raise AssertionError(f"wire-path claims failed: {res['claims']}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

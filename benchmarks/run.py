@@ -8,6 +8,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   tab2   query latency/hit-ratio   fig9c  end-to-end analysis
   fig9d  metadata plane: pipelined five-op writes + scatter-gather query
   fig10  replicated metadata tier: replica reads, convergence, journal replay
+  fig11  wire-path acceleration: codec fast path, compacted shipping, pruning
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -31,6 +32,7 @@ from benchmarks import (
     fig9c_end2end,
     fig9d_plane,
     fig10_replication,
+    fig11_wirepath,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -63,6 +65,7 @@ def main(argv=None) -> int:
         ("fig9c_end2end", fig9c_end2end.main),
         ("fig9d_plane", fig9d_plane.main),
         ("fig10_replication", fig10_replication.main),
+        ("fig11_wirepath", fig11_wirepath.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

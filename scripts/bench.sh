@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
-# Plane + replication benchmark gate.
+# Plane + replication + wire-path benchmark gate.
 #
 #   scripts/bench.sh            # quick sweeps (CI-sized)
 #   FULL=1 scripts/bench.sh     # full sweeps (incl. 16/32-DTN planner scaling)
 #
-# Runs the fig9d metadata-plane benchmark and the fig10 replication-tier
-# benchmark, writes results/fig9d_plane.json + results/fig10_replication.json,
-# and exits non-zero when a benchmark errors or a fig10 claim (replica reads
-# >=2x, replica convergence, zero journal loss) fails — fig10's main() raises
-# on failed claims.
+# Runs the fig9d metadata-plane benchmark, the fig10 replication-tier
+# benchmark, and the fig11 wire-path benchmark (codec fast path, compacted
+# shipping, shard pruning), writing results/fig{9d,10,11}*.json.  Exits
+# non-zero when a benchmark errors, a fig10/fig11 claim fails (their main()
+# raises), or the perf-regression gate trips: scripts/bench_gate.py compares
+# the key speedup/reduction ratios against the committed baseline
+# (scripts/bench_baseline.json) with a tolerance band.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,13 +21,18 @@ if [ -n "${FULL:-}" ]; then
 fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" - <<EOF
-from benchmarks import fig9d_plane, fig10_replication
+from benchmarks import fig9d_plane, fig10_replication, fig11_wirepath
 
 fig9d = fig9d_plane.main(quick=$QUICK)
 assert fig9d["write_speedup_pipelined"] >= 2.0, fig9d["write_speedup_pipelined"]
 print()
 fig10_replication.main(quick=$QUICK)  # raises if any claim fails
+print()
+fig11_wirepath.main(quick=$QUICK)  # raises if any claim fails
 EOF
 
 echo
-echo "bench: OK (results/fig9d_plane.json, results/fig10_replication.json)"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/bench_gate.py
+
+echo
+echo "bench: OK (results/fig9d_plane.json, results/fig10_replication.json, results/fig11_wirepath.json)"

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare results/*.json against the committed baseline.
+
+    python scripts/bench_gate.py            # gate (exit 1 on regression)
+    python scripts/bench_gate.py --record   # rewrite the baseline from results/
+
+The baseline (scripts/bench_baseline.json) pins machine-independent *ratios*
+— pipelined-write speedup, replica-read speedup, codec pack speedup, shipped-
+bytes reduction, pruned-shard fraction — with a tolerance band, so a refactor
+that silently costs 2x on the wire path fails CI while ordinary host noise
+does not.  Run the benchmarks first (scripts/bench.sh does both in order).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "scripts", "bench_baseline.json")
+RESULTS = os.path.join(ROOT, "results")
+
+
+def _lookup(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def gate() -> int:
+    with open(BASELINE) as f:
+        base = json.load(f)
+    tol = float(base.get("tolerance", 0.25))
+    failures = []
+    for bench, metrics in base["metrics"].items():
+        path = os.path.join(RESULTS, f"{bench}.json")
+        if not os.path.exists(path):
+            failures.append(f"{bench}: results/{bench}.json missing (bench not run?)")
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        for dotted, want in metrics.items():
+            got = _lookup(doc, dotted)
+            floor = want * (1.0 - tol)
+            if got is None:
+                failures.append(f"{bench}.{dotted}: metric missing from results")
+            elif float(got) < floor:
+                failures.append(
+                    f"{bench}.{dotted}: {float(got):.3f} < floor {floor:.3f} "
+                    f"(baseline {want} - {tol:.0%})"
+                )
+            else:
+                print(f"  ok {bench}.{dotted}: {float(got):.3f} >= {floor:.3f}")
+    if failures:
+        print("bench gate: PERFORMANCE REGRESSION", file=sys.stderr)
+        for line in failures:
+            print(f"  FAIL {line}", file=sys.stderr)
+        return 1
+    print("bench gate: OK")
+    return 0
+
+
+def record() -> int:
+    with open(BASELINE) as f:
+        base = json.load(f)
+    for bench, metrics in base["metrics"].items():
+        path = os.path.join(RESULTS, f"{bench}.json")
+        if not os.path.exists(path):
+            print(f"skip {bench}: no results", file=sys.stderr)
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        for dotted in list(metrics):
+            got = _lookup(doc, dotted)
+            if got is not None:
+                metrics[dotted] = round(float(got), 3)
+                print(f"  record {bench}.{dotted} = {metrics[dotted]}")
+    with open(BASELINE, "w") as f:
+        json.dump(base, f, indent=2)
+        f.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(record() if "--record" in sys.argv[1:] else gate())

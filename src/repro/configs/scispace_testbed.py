@@ -11,7 +11,9 @@ simulated channels (DESIGN.md §2, §8).
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from repro.core.query import SUMMARY_BITS
 from repro.core.replication import (
+    COMPACT_WINDOW,
     PUMP_MAX_AGE_S,
     PUMP_MAX_PENDING,
     WB_MAX_AGE_S,
@@ -48,6 +50,18 @@ class TestbedConfig:
     # planner merge fan-in: the scatter-gather tree-merge folds at most this
     # many per-shard partial results per level (scaling past 8 DTNs)
     query_merge_group: int = 8
+    # wire-path acceleration knobs (all honored by
+    # Collaboration.start_replication(batch_limit=..., adaptive_batch=...)
+    # and Collaboration.add_datacenter(summary_bits=...)):
+    # - compact_window: max records a pump drains (and path-compacts) per
+    #   window; also the AdaptiveBatcher's starting point
+    # - summary_bits: width of each discovery shard's bloom summary (4096
+    #   bits ≈ 512 B per shard per reply — noise next to the rows it prunes)
+    # - adaptive_batch: let drain-latency feedback resize the window inside
+    #   [32, 4096] instead of the fixed compact_window
+    compact_window: int = COMPACT_WINDOW
+    summary_bits: int = SUMMARY_BITS
+    adaptive_batch: bool = False
 
 
 TESTBED = TestbedConfig()

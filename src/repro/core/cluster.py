@@ -39,7 +39,14 @@ class DTN:
     every peer DTN asynchronously.
     """
 
-    def __init__(self, dtn_id: int, dc_id: str, backend: StorageBackend, db_dir: Optional[str]):
+    def __init__(
+        self,
+        dtn_id: int,
+        dc_id: str,
+        backend: StorageBackend,
+        db_dir: Optional[str],
+        summary_bits: Optional[int] = None,
+    ):
         self.dtn_id = dtn_id
         self.dc_id = dc_id
         self.backend = backend
@@ -59,10 +66,13 @@ class DTN:
             clock=self.clock, log=self.replication_log, applied=self.applied,
             mutation_lock=self.mutation_lock,
         )
+        disc_kwargs: dict = {}
+        if summary_bits is not None:
+            disc_kwargs["summary_bits"] = summary_bits
         self.discovery = DiscoveryService(
             self.discovery_shard, dtn_id=dtn_id, backend=backend,
             clock=self.clock, log=self.replication_log, applied=self.applied,
-            mutation_lock=self.mutation_lock,
+            mutation_lock=self.mutation_lock, **disc_kwargs,
         )
         self.metadata_server = RpcServer(self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock)
         self.discovery_server = RpcServer(self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock)
@@ -182,6 +192,7 @@ class Collaboration:
         db_dir: Optional[str] = None,
         store_gbps: float = 0.0,
         store_lat_s: float = 0.0,
+        summary_bits: Optional[int] = None,
     ) -> DataCenter:
         """Add a DC.  ``root=None`` ⇒ in-memory PFS; else a PosixBackend at root."""
         with self._lock:
@@ -195,7 +206,7 @@ class Collaboration:
             )
             dc = DataCenter(dc_id, backend)
             for _ in range(n_dtns):
-                dtn = DTN(len(self.dtns), dc_id, backend, db_dir)
+                dtn = DTN(len(self.dtns), dc_id, backend, db_dir, summary_bits=summary_bits)
                 dc.dtns.append(dtn)
                 self.dtns.append(dtn)
             self.datacenters[dc_id] = dc
@@ -225,7 +236,9 @@ class Collaboration:
 
         Until this is called the logs still accumulate (cheap, in-memory)
         but nothing is shipped — the pre-replication behavior.  Accepts the
-        pump's threshold knobs (``max_pending``, ``max_age_s``, ``poll_s``).
+        pump's threshold knobs (``max_pending``, ``max_age_s``, ``poll_s``)
+        and the wire-path knobs (``batch_limit``, ``compact``, ``deltas``,
+        ``adaptive_batch``) — see :class:`~repro.core.replication.ReplicaPump`.
         """
         for dtn in self.dtns:
             if dtn.replica_pump is None:

@@ -30,7 +30,15 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 from .backends import StorageBackend
 from .metadata import DiscoveryShard
-from .query import Predicate, Query, parse_query
+from .query import (
+    Predicate,
+    Query,
+    SUMMARY_BITS,
+    ShardSummary,
+    parse_query,
+    path_prefix_terms,
+    summary_terms_for_row,
+)
 from .replication import AppliedMap, EpochClock, ReplicationLog
 from .scidata import attr_type_of, read_header
 
@@ -77,6 +85,7 @@ class DiscoveryService:
         log: Optional[ReplicationLog] = None,
         applied: Optional[AppliedMap] = None,
         mutation_lock: Optional[threading.RLock] = None,
+        summary_bits: int = SUMMARY_BITS,
     ):
         self.shard = shard
         self.dtn_id = dtn_id
@@ -91,6 +100,18 @@ class DiscoveryService:
         #: (path, origin) -> last applied epoch (replacement-set granularity)
         self._applied_index: Dict[tuple, int] = {}
         self._apply_lock = threading.Lock()
+        #: bloom summary over rows THIS shard originates — the planner prunes
+        #: fan-outs against it (own-origin only: every row's origin shard is
+        #: always a candidate, which is what keeps pruned unions complete)
+        self.summary = ShardSummary(summary_bits)
+        #: origin dtn_id -> that origin's summary, learned via replication
+        #: (incrementally from applied index records, wholesale from "summary"
+        #: records) so a client can prune against all shards by asking one DTN
+        self._peer_summaries: Dict[int, ShardSummary] = {}
+        #: origin dtn_id -> epoch its cached summary reflects
+        self._peer_summary_epoch: Dict[int, int] = {}
+        #: summary.version already replicated (dirty tracking for the pump)
+        self._summary_logged_version = 0
 
     # -- indexing --------------------------------------------------------------
     def insert_attributes(self, rows: List[Dict[str, Any]], epoch: Optional[int] = None) -> int:
@@ -130,6 +151,9 @@ class DiscoveryService:
             " VALUES(?,?,?,?,?,?,?,?)",
             packed,
         )
+        for path, name, t, vi, vr, vt, _origin, _epoch in packed:
+            self.summary.add_row(name, t, vi, vr, vt)
+            self.summary.add_path(path)
         if log_paths:
             for path in dict.fromkeys(r["path"] for r in rows):
                 self._log_index(path, epoch)
@@ -265,6 +289,9 @@ class DiscoveryService:
             " VALUES(?,?,?,?,?,?,?,?)",
             all_rows,
         )
+        for path, name, t, vi, vr, vt, _origin, _epoch in all_rows:
+            self.summary.add_row(name, t, vi, vr, vt)
+            self.summary.add_path(path)
         for path in paths:
             self._log_index(path, epochs[path])
         return len(paths)
@@ -279,35 +306,188 @@ class DiscoveryService:
             self._log_index(path, epoch)
             return n
 
+    # -- summary maintenance ---------------------------------------------------
+    def log_summary_if_dirty(self) -> bool:
+        """Replicate this shard's summary if bits flipped since the last ship.
+
+        Rides the ordinary replication log as an ``op="summary"`` record —
+        the pump's pre-drain hook calls this, so a summary change travels in
+        the same drain as the index records that caused it.  No clock tick:
+        a summary is derived state, not a namespace mutation (its epoch is
+        the shard's last local mutation, which is exactly the freshness its
+        bits reflect).
+        """
+        if self.log is None:
+            return False
+        with self._mutation_lock:
+            if self.summary.version <= self._summary_logged_version:
+                return False
+            self._summary_logged_version = self.summary.version
+            self.log.append(
+                {
+                    "service": "sds",
+                    "op": "summary",
+                    "path": "",
+                    "epoch": self.clock.last_local(),
+                    "origin": self.dtn_id,
+                    "nbits": self.summary.nbits,
+                    "bits": self.summary.to_message()["bits"],
+                }
+            )
+            return True
+
+    def summaries(self) -> Dict[str, Any]:
+        """Every shard summary this DTN knows: its own plus replicated peers'.
+
+        One RPC to any DTN gives a client the material to prune a global
+        fan-out — the cheap "ask fewer peers" half of the wire-path work.
+        Keys are origin dtn_ids (as strings, codec-safe); each value carries
+        the summary bits plus the origin epoch they reflect.  The reply also
+        carries this DTN's applied map: a peer filter here is complete
+        through ``max(its epoch, applied[origin])`` — every record applied
+        from an origin is folded into its cached filter — which is what lets
+        a client judge each filter against its own session bar.
+        """
+        out: Dict[str, Any] = {
+            str(self.dtn_id): dict(self.summary.to_message(), epoch=self.clock.last_local())
+        }
+        with self._apply_lock:
+            for origin, summary in self._peer_summaries.items():
+                out[str(origin)] = dict(
+                    summary.to_message(), epoch=self._peer_summary_epoch.get(origin, 0)
+                )
+        return {"dtn_id": self.dtn_id, "summaries": out, "applied": self.applied_map()}
+
+    def _note_peer_rows(self, origin: int, epoch: int, path: str, rows: Iterable) -> None:
+        """Fold an applied index record into the cached peer summary."""
+        summary = self._peer_summaries.get(origin)
+        if summary is None:
+            summary = self._peer_summaries[origin] = ShardSummary(self.summary.nbits)
+        for name, t, vi, vr, vt in (tuple(r) for r in rows):
+            summary.add_row(name, t, vi, vr, vt)
+        summary.add_path(path)
+        if epoch > self._peer_summary_epoch.get(origin, 0):
+            self._peer_summary_epoch[origin] = epoch
+
     # -- replica role ----------------------------------------------------------
-    def apply_replicated_index(self, records: List[Dict[str, Any]]) -> int:
-        """Apply peer origins' index records: per (path, origin) replacement
-        sets, epoch last-writer-wins, idempotent under replay/reorder."""
+    def apply_replicated_index(self, records: List[Dict[str, Any]]) -> Dict[str, Any]:
+        """Apply peer origins' replicated discovery records.
+
+        Three record shapes, dispatched on ``op``:
+
+        * ``index`` (default) — full replacement set per (path, origin),
+          epoch last-writer-wins, idempotent under replay/reorder.
+        * ``index_delta`` — row adds/removals against the previously shipped
+          version (``base`` epoch).  Applied only when this replica's applied
+          epoch for (path, origin) equals ``base``; otherwise the path lands
+          in the returned ``need_full`` list and the sender re-ships the full
+          set.  Removals are verified to exist *before* any mutation, so a
+          delta either applies completely or not at all.
+        * ``summary`` — wholesale refresh of the origin's shard summary.
+
+        Watermarks: a compacted record's ``wm`` field (when present) bounds
+        how far the per-origin AppliedMap may advance — the record's own
+        epoch can sit *ahead* of still-unshipped earlier mutations when the
+        sender coalesced a window, and claiming it early would let replica
+        freshness checks pass before the data they vouch for has arrived.
+        """
         applied = 0
+        need_full: List[str] = []
         with self._apply_lock:
             for rec in records:
+                op = rec.get("op", "index")
                 origin = int(rec.get("origin", -1))
                 epoch = int(rec.get("epoch", 0))
-                path = rec["path"]
                 self.clock.observe(epoch)
-                self.applied.advance(origin, epoch)  # delivery watermark
+                if op != "index_delta":
+                    # deltas advance the watermark only after they apply — a
+                    # refused delta (need_full) must not let freshness checks
+                    # vouch for rows that are still in flight
+                    self.applied.advance(origin, int(rec.get("wm", epoch)))
+                if op == "summary":
+                    try:
+                        summary = ShardSummary(nbits=int(rec["nbits"]), bits=bytes(rec["bits"]))
+                    except (KeyError, ValueError):
+                        continue  # malformed summary: ignorable derived state
+                    self._peer_summaries[origin] = summary
+                    if epoch > self._peer_summary_epoch.get(origin, 0):
+                        self._peer_summary_epoch[origin] = epoch
+                    applied += 1
+                    continue
+                path = rec["path"]
                 key = (path, origin)
                 if epoch <= self._applied_index.get(key, 0):
+                    if op == "index_delta":  # replayed delta: already applied
+                        self.applied.advance(origin, int(rec.get("wm", epoch)))
                     continue
-                self.shard.execute(
-                    "DELETE FROM attributes WHERE path=? AND origin=?", (path, origin)
-                )
-                self.shard.executemany(
-                    "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
-                    " VALUES(?,?,?,?,?,?,?,?)",
-                    [
-                        (path, name, t, vi, vr, vt, origin, epoch)
-                        for name, t, vi, vr, vt in (tuple(r) for r in rec.get("rows") or [])
-                    ],
-                )
+                if op == "index_delta":
+                    if self._applied_index.get(key, 0) != int(rec.get("base", -1)):
+                        need_full.append(path)
+                        continue
+                    if not self._apply_delta(rec, path, origin, epoch):
+                        need_full.append(path)
+                        continue
+                    self.applied.advance(origin, int(rec.get("wm", epoch)))
+                    rows = list(rec.get("add") or [])
+                else:
+                    rows = list(rec.get("rows") or [])
+                    self.shard.execute(
+                        "DELETE FROM attributes WHERE path=? AND origin=?", (path, origin)
+                    )
+                    self.shard.executemany(
+                        "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
+                        " VALUES(?,?,?,?,?,?,?,?)",
+                        [
+                            (path, name, t, vi, vr, vt, origin, epoch)
+                            for name, t, vi, vr, vt in (tuple(r) for r in rows)
+                        ],
+                    )
                 self._applied_index[key] = epoch
+                self._note_peer_rows(origin, epoch, path, rows)
                 applied += 1
-        return applied
+        return {"applied": applied, "need_full": need_full}
+
+    def _apply_delta(self, rec: Dict[str, Any], path: str, origin: int, epoch: int) -> bool:
+        """Apply one delta record; False means "cannot apply, need full".
+
+        Removals are resolved to concrete rowids first (NULL-safe ``IS``
+        comparisons; duplicates consume distinct rowids), so a stale or
+        corrupt delta is rejected before the shard is touched.
+        """
+        removed_ids: List[int] = []
+        taken = set()
+        for row in rec.get("del") or []:
+            name, t, vi, vr, vt = tuple(row)
+            found = None
+            for (rowid,) in self.shard.execute(
+                "SELECT id FROM attributes WHERE path=? AND origin=? AND attr_name=?"
+                " AND attr_type=? AND value_int IS ? AND value_real IS ? AND value_text IS ?",
+                (path, origin, name, t, vi, vr, vt),
+            ):
+                if rowid not in taken:
+                    found = rowid
+                    break
+            if found is None:
+                return False
+            taken.add(found)
+            removed_ids.append(found)
+        self.shard.executemany(
+            "DELETE FROM attributes WHERE id=?", [(rowid,) for rowid in removed_ids]
+        )
+        self.shard.executemany(
+            "INSERT INTO attributes(path,attr_name,attr_type,value_int,value_real,value_text,origin,epoch)"
+            " VALUES(?,?,?,?,?,?,?,?)",
+            [
+                (path, name, t, vi, vr, vt, origin, epoch)
+                for name, t, vi, vr, vt in (tuple(r) for r in rec.get("add") or [])
+            ],
+        )
+        # the origin re-stamps every surviving row of the path to the record
+        # epoch when it logs (one version per replacement set) — mirror that
+        self.shard.execute(
+            "UPDATE attributes SET epoch=? WHERE path=? AND origin=?", (epoch, path, origin)
+        )
+        return True
 
     def applied_map(self) -> Dict[str, int]:
         """Codec-safe applied-epoch map (origin dtn_id as str keys)."""
@@ -385,6 +565,10 @@ class DiscoveryService:
             # each origin, so a replica-local query can be judged fresh/stale
             "applied": self.applied_map(),
             "dtn_id": self.dtn_id,
+            # summary piggyback: every reply refreshes the caller's pruning
+            # cache for free (no extra RPC in the pruning protocol)
+            "summary": self.summary.to_message(),
+            "summary_epoch": self.clock.last_local(),
         }
 
     def get_attrs(self, paths: List[str]) -> List[Dict[str, Any]]:

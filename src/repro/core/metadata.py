@@ -427,8 +427,11 @@ class MetadataService:
                 epoch = int(rec.get("epoch", 0))
                 self.clock.observe(epoch)
                 # delivery watermark: a record superseded by LWW still counts
-                # as applied — the origin's history up to this epoch is here
-                self.applied.advance(origin, epoch)
+                # as applied — the origin's history up to this epoch is here.
+                # Compacted windows carry an explicit ``wm`` (the epoch the
+                # sender has *fully* shipped): a coalesced record's own epoch
+                # may sit ahead of still-unsent earlier mutations.
+                self.applied.advance(origin, int(rec.get("wm", epoch)))
                 if op == "upsert":
                     for entry in rec.get("entries") or []:
                         if not self._newer(int(entry["epoch"]), int(entry["origin"]), entry["path"]):

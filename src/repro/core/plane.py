@@ -42,6 +42,7 @@ from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .metadata import hash_placement, path_hash
+from .query import ShardSummary
 from .replication import WB_MAX_AGE_S, WB_MAX_PENDING, WriteBackJournal
 from .rpc import RpcClient, RpcError
 
@@ -221,6 +222,7 @@ class ServicePlane:
         wb_max_pending: int = WB_MAX_PENDING,
         wb_max_age_s: float = WB_MAX_AGE_S,
         prefer_replica: bool = False,
+        summary_ttl_s: float = 0.0,
     ):
         self.collab = collab
         self.home_dc = home_dc
@@ -250,6 +252,21 @@ class ServicePlane:
         self._journal_fences: Dict[str, int] = self.journal.recovered_fences()
         self.replica_hits = 0
         self.replica_stale_fallbacks = 0
+        #: shard-pruning summary cache: dtn_idx -> (epoch, cached_at, summary).
+        #: The authoritative pruning source is :meth:`note_summaries_bulk` —
+        #: one query-time RPC to a local replica whose filters the
+        #: replication stream keeps current, gated per origin on the
+        #: replica's applied map meeting this client's session bar (the same
+        #: bar replica reads use).  The cache only *reuses* those results
+        #: across queries when ``summary_ttl_s > 0``: a cached filter cannot
+        #: see server-side indexing this client never witnessed (async
+        #: drains, other collaborators), so reuse trades a TTL-bounded
+        #: recall window for the warm RPC — off by default.
+        self.summary_ttl_s = summary_ttl_s
+        self._summaries: Dict[int, Tuple[int, float, ShardSummary]] = {}
+        self.shard_contacts = 0
+        self.shards_pruned = 0
+        self.pruned_empty_queries = 0
         self._bus: Optional[InvalidationBus] = getattr(collab, "invalidations", None)
         # write-only clients (MEU) publish invalidations but never read
         # through their cache, so they skip the subscription — otherwise every
@@ -273,6 +290,10 @@ class ServicePlane:
         if service == "sds":
             return self.sds
         raise ValueError(f"unknown service {service!r} (want 'meta' or 'sds')")
+
+    def clients(self) -> List[RpcClient]:
+        """Every RPC client this plane owns (both services), for accounting."""
+        return self.meta + self.sds
 
     # -- single + batched calls ------------------------------------------------
     def call(self, service: str, dtn_idx: int, method: str, **kwargs: Any) -> Any:
@@ -381,6 +402,78 @@ class ServicePlane:
         if not self.local_dtns:
             return None
         return self.local_dtns[hash_placement(path, len(self.local_dtns))]
+
+    # -- shard summaries -------------------------------------------------------
+    def note_summary(self, dtn_idx: int, reply: Any) -> None:
+        """Harvest the piggybacked shard summary from a ``scatter_query`` reply.
+
+        Summaries ride every discovery reply for free (no extra RPC); newer
+        epochs replace older cached copies, and equal epochs refresh the TTL.
+        """
+        if not isinstance(reply, dict):
+            return
+        msg = reply.get("summary")
+        if not isinstance(msg, dict):
+            return
+        epoch = int(reply.get("summary_epoch", 0))
+        cached = self._summaries.get(dtn_idx)
+        if cached is not None and cached[0] > epoch:
+            return
+        try:
+            summary = ShardSummary.from_message(msg)
+        except (KeyError, TypeError, ValueError):
+            return
+        self._summaries[dtn_idx] = (epoch, time.monotonic(), summary)
+
+    def note_summaries_bulk(self, reply: Any) -> Dict[int, ShardSummary]:
+        """Ingest a ``summaries`` RPC reply (own + replicated peer filters).
+
+        Returns the filters that are usable for pruning *right now*.  A
+        replica's copy of origin *S*'s filter is complete through
+        ``max(filter epoch, applied[S])`` (every record it applies from S is
+        folded in), so it may prune S only when that bound covers every
+        epoch this client has witnessed from S — the session-consistency
+        bar.  The serving DTN's own filter is judged the same way against
+        its own epoch.  Usable filters also land in the TTL cache.
+        """
+        if not isinstance(reply, dict):
+            return {}
+        usable: Dict[int, ShardSummary] = {}
+        applied = {int(k): int(v) for k, v in (reply.get("applied") or {}).items()}
+        now = time.monotonic()
+        for origin_s, msg in (reply.get("summaries") or {}).items():
+            try:
+                origin = int(origin_s)
+                epoch = int(msg.get("epoch", 0))
+                summary = ShardSummary.from_message(msg)
+            except (AttributeError, KeyError, TypeError, ValueError):
+                continue
+            if origin < 0 or origin >= len(self.sds):
+                continue
+            complete_through = max(epoch, applied.get(origin, 0))
+            if complete_through < self.seen_epoch(origin):
+                continue  # session bar not met: this filter may miss our writes
+            usable[origin] = summary
+            cached = self._summaries.get(origin)
+            if cached is None or cached[0] <= complete_through:
+                self._summaries[origin] = (complete_through, now, summary)
+        return usable
+
+    def fresh_summaries(self) -> Dict[int, ShardSummary]:
+        """TTL-cache reuse of previously ingested filters (see ``_summaries``).
+
+        Empty unless ``summary_ttl_s > 0`` — cached filters are blind to
+        server-side indexing this client never witnessed, so cross-query
+        reuse is an explicit opt-in with a TTL-bounded recall window.
+        """
+        if self.summary_ttl_s <= 0:
+            return {}
+        now = time.monotonic()
+        fresh: Dict[int, ShardSummary] = {}
+        for idx, (epoch, cached_at, summary) in self._summaries.items():
+            if epoch >= self.seen_epoch(idx) and now - cached_at <= self.summary_ttl_s:
+                fresh[idx] = summary
+        return fresh
 
     # -- cached metadata surface ----------------------------------------------
     def stat(self, path: str) -> Optional[Dict[str, Any]]:

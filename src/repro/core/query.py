@@ -18,15 +18,66 @@ Each predicate matches rows of one attribute; conjunctions intersect the
 *file sets* (a file satisfies the query when every predicate matches at least
 one of its attribute rows — the many-to-many association the paper keeps a
 relational store for).
+
+Summary-pruning protocol
+------------------------
+Each discovery shard maintains a :class:`ShardSummary` — a bloom-style bitset
+over the *terms* its index could answer for:
+
+* ``a:<name>`` — some row carries attribute ``<name>``;
+* ``e:<name>:t:<text>`` / ``e:<name>:n:<num>`` — some row has exactly that
+  value (numerics normalized so ``5`` and ``5.0`` share a term, mirroring the
+  cross-typed SQL match in :meth:`Predicate.to_sql`);
+* ``p:<prefix>`` — some indexed path lives under ``<prefix>``.
+
+Bits are only ever set (deletes never clear them), so a summary can go stale
+in exactly one direction: **false positives only** — a shard may be contacted
+needlessly, never skipped wrongly.  :meth:`Predicate.summary_requirements`
+compiles a predicate to CNF over terms (every group must have at least one
+term present for the shard to possibly match); equality predicates also
+require their value term, while range/like predicates only require attribute
+presence.  :meth:`ScatterGatherPlan.prune` evaluates those requirements
+against whatever fresh summaries the caller holds and returns a
+:class:`PruneDecision`: per-shard predicate subsets to push down, shards with
+no candidate predicate dropped from the fan-out entirely, and ``empty=True``
+when some predicate has *zero* candidate shards — the query answers ``[]``
+with no RPC at all.  Shards without a fresh summary always receive every
+predicate, so pruning degrades to the full fan-out, never past it.
+
+Summaries travel on existing wires: every ``scatter_query`` reply piggybacks
+the shard's current summary (epoch-stamped), and summaries replicate between
+DTNs through the ordinary replication log — no new RPC is introduced.
 """
 
 from __future__ import annotations
 
+import hashlib
 import re
-from dataclasses import dataclass
-from typing import Any, List, Sequence, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
-__all__ = ["Predicate", "Query", "parse_query", "QueryError", "ScatterGatherPlan", "plan_query"]
+__all__ = [
+    "Predicate",
+    "Query",
+    "parse_query",
+    "QueryError",
+    "ScatterGatherPlan",
+    "plan_query",
+    "ShardSummary",
+    "PruneDecision",
+    "SUMMARY_BITS",
+    "SUMMARY_HASHES",
+]
+
+#: Default summary width. 4096 bits = 512 B on the wire — two orders of
+#: magnitude under one attribute-row replication record per 100 files, yet
+#: large enough that a testbed-sized shard (≤ a few thousand terms) stays far
+#: from saturation.
+SUMMARY_BITS = 4096
+
+#: Hash functions per term (k).  With n/m ratios this testbed produces, k=3
+#: keeps the false-positive rate under a few percent.
+SUMMARY_HASHES = 3
 
 
 class QueryError(ValueError):
@@ -82,6 +133,131 @@ def _coerce(raw: str) -> Tuple[str, Union[int, float, str]]:
     return "text", raw
 
 
+def _num_norm(value: Union[int, float]) -> str:
+    """Normalize a numeric so int/float representations share one term.
+
+    Mirrors the cross-typed column match in :meth:`Predicate.to_sql`: a
+    predicate ``hour = 12`` must hit rows stored as ``12`` *and* ``12.0``.
+    """
+    if isinstance(value, float) and value.is_integer():
+        return repr(int(value))
+    return repr(value)
+
+
+def summary_terms_for_row(
+    attr_name: str,
+    attr_type: str,
+    value_int: Optional[int],
+    value_real: Optional[float],
+    value_text: Optional[str],
+) -> List[str]:
+    """The terms one attribute row contributes to its shard's summary."""
+    terms = [f"a:{attr_name}"]
+    if attr_type == "text" and value_text is not None:
+        terms.append(f"e:{attr_name}:t:{value_text}")
+    elif value_int is not None:
+        terms.append(f"e:{attr_name}:n:{_num_norm(value_int)}")
+    elif value_real is not None:
+        terms.append(f"e:{attr_name}:n:{_num_norm(value_real)}")
+    return terms
+
+
+def path_prefix_terms(path: str) -> List[str]:
+    """``p:`` terms for every ancestor prefix of ``path`` (including "/")."""
+    terms = ["p:/"]
+    parts = [p for p in path.split("/") if p]
+    prefix = ""
+    for part in parts[:-1]:
+        prefix += "/" + part
+        terms.append(f"p:{prefix}")
+    return terms
+
+
+class ShardSummary:
+    """Bloom-style bitset over one discovery shard's indexed terms.
+
+    Sticky by construction — :meth:`add` only sets bits, so membership answers
+    are one-sided: ``might_contain`` returning ``False`` is a proof of
+    absence *as of the summary's epoch*; ``True`` proves nothing.  ``version``
+    counts bit flips (not adds), which is what the discovery service's
+    dirty-tracking uses to decide when a summary is worth re-replicating.
+    """
+
+    __slots__ = ("nbits", "_bits", "version")
+
+    def __init__(self, nbits: int = SUMMARY_BITS, bits: Optional[bytes] = None):
+        if nbits <= 0 or nbits % 8:
+            raise QueryError(f"summary nbits must be a positive multiple of 8, got {nbits}")
+        self.nbits = nbits
+        self._bits = bytearray(bits) if bits is not None else bytearray(nbits // 8)
+        if len(self._bits) != nbits // 8:
+            raise QueryError(f"summary bit buffer is {len(self._bits)}B, want {nbits // 8}B")
+        self.version = 0
+
+    def _positions(self, term: str) -> List[int]:
+        digest = hashlib.blake2b(term.encode("utf-8"), digest_size=4 * SUMMARY_HASHES).digest()
+        return [
+            int.from_bytes(digest[i : i + 4], "little") % self.nbits
+            for i in range(0, 4 * SUMMARY_HASHES, 4)
+        ]
+
+    def add(self, term: str) -> bool:
+        """Set the term's bits; return True if any bit actually flipped."""
+        flipped = False
+        for p in self._positions(term):
+            mask = 1 << (p & 7)
+            if not self._bits[p >> 3] & mask:
+                self._bits[p >> 3] |= mask
+                flipped = True
+        if flipped:
+            self.version += 1
+        return flipped
+
+    def might_contain(self, term: str) -> bool:
+        return all(self._bits[p >> 3] & (1 << (p & 7)) for p in self._positions(term))
+
+    def add_row(
+        self,
+        attr_name: str,
+        attr_type: str,
+        value_int: Optional[int],
+        value_real: Optional[float],
+        value_text: Optional[str],
+    ) -> None:
+        for term in summary_terms_for_row(attr_name, attr_type, value_int, value_real, value_text):
+            self.add(term)
+
+    def add_path(self, path: str) -> None:
+        for term in path_prefix_terms(path):
+            self.add(term)
+
+    def might_match(self, pred: "Predicate") -> bool:
+        """Could this shard hold a row satisfying ``pred``? (one-sided)"""
+        return all(
+            any(self.might_contain(term) for term in group)
+            for group in pred.summary_requirements()
+        )
+
+    def saturation(self) -> float:
+        """Fraction of bits set — a load signal, not a correctness one."""
+        return sum(bin(b).count("1") for b in self._bits) / self.nbits
+
+    def merge(self, other: "ShardSummary") -> None:
+        """Bitwise OR ``other`` in (both sides must agree on width)."""
+        if other.nbits != self.nbits:
+            raise QueryError(f"cannot merge {other.nbits}-bit summary into {self.nbits}-bit")
+        for i, b in enumerate(other._bits):
+            self._bits[i] |= b
+        self.version += 1
+
+    def to_message(self) -> Dict[str, Any]:
+        return {"nbits": self.nbits, "bits": bytes(self._bits)}
+
+    @classmethod
+    def from_message(cls, msg: Mapping[str, Any]) -> "ShardSummary":
+        return cls(nbits=int(msg["nbits"]), bits=bytes(msg["bits"]))
+
+
 @dataclass(frozen=True)
 class Predicate:
     attr: str
@@ -111,6 +287,22 @@ class Predicate:
             params = params + (self.value,)
         sql = f"SELECT DISTINCT path FROM attributes WHERE attr_name = ? AND {cond}"
         return sql, (self.attr,) + tuple(params)
+
+    def summary_requirements(self) -> List[List[str]]:
+        """CNF over summary terms a shard must pass to possibly match.
+
+        Every predicate requires the attribute-presence term; equality
+        predicates additionally require the exact value term.  Range and
+        ``like`` predicates cannot be narrowed beyond attribute presence —
+        the summary stores point terms, not order.
+        """
+        groups = [[f"a:{self.attr}"]]
+        if self.op == "=":
+            if self.attr_type == "text":
+                groups.append([f"e:{self.attr}:t:{self.value}"])
+            else:
+                groups.append([f"e:{self.attr}:n:{_num_norm(self.value)}"])
+        return groups
 
 
 @dataclass(frozen=True)
@@ -193,6 +385,72 @@ class ScatterGatherPlan:
             if not matched:
                 return []
         return sorted(matched)
+
+    def prune(
+        self,
+        summaries: Mapping[int, "ShardSummary"],
+        n_shards: int,
+    ) -> "PruneDecision":
+        """Decide which (shard, predicate) pairs must actually be contacted.
+
+        ``summaries`` holds whatever *fresh* summaries the caller has — a
+        shard with no entry is assumed to possibly match everything (full
+        pushdown), so missing/stale summaries degrade pruning to the plain
+        fan-out rather than risking a wrong skip.  If any predicate ends up
+        with zero candidate shards the whole conjunction is empty
+        (``∩`` over an empty ``∪``) and ``send`` comes back empty with
+        ``empty=True``.
+        """
+        preds = self.query.predicates
+        send: Dict[int, List[int]] = {}
+        pruned_pairs = 0
+        candidates = [0] * len(preds)
+        for shard in range(n_shards):
+            summary = summaries.get(shard)
+            if summary is None:
+                send[shard] = list(range(len(preds)))
+                for i in range(len(preds)):
+                    candidates[i] += 1
+                continue
+            keep: List[int] = []
+            for i, pred in enumerate(preds):
+                if summary.might_match(pred):
+                    keep.append(i)
+                    candidates[i] += 1
+                else:
+                    pruned_pairs += 1
+            if keep:
+                send[shard] = keep
+        empty = any(c == 0 for c in candidates)
+        if empty:
+            send = {}
+        return PruneDecision(
+            send=send,
+            n_shards=n_shards,
+            pruned_shards=n_shards - len(send),
+            pruned_pairs=pruned_pairs,
+            empty=empty,
+        )
+
+
+@dataclass(frozen=True)
+class PruneDecision:
+    """Outcome of :meth:`ScatterGatherPlan.prune` for one query.
+
+    ``send`` maps shard index → the *global* predicate indices to push down
+    there; shards absent from ``send`` are skipped entirely.  ``empty`` means
+    some predicate had zero candidate shards, so the conjunction is provably
+    empty and no shard needs contacting at all.
+    """
+
+    send: Dict[int, List[int]]
+    n_shards: int
+    pruned_shards: int
+    pruned_pairs: int
+    empty: bool
+
+    def contacted(self) -> int:
+        return len(self.send)
 
 
 def plan_query(text: str) -> ScatterGatherPlan:

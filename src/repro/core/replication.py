@@ -46,6 +46,7 @@ import os
 import struct
 import threading
 import time
+from collections import Counter
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 from .rpc import RpcError, pack, unpack
@@ -55,14 +56,17 @@ if TYPE_CHECKING:  # pragma: no cover - type-only imports
 
 __all__ = [
     "AppliedMap",
+    "AdaptiveBatcher",
     "EpochClock",
     "ReplicationLog",
     "ReplicaPump",
     "WriteBackJournal",
+    "compact_window",
     "WB_MAX_PENDING",
     "WB_MAX_AGE_S",
     "PUMP_MAX_PENDING",
     "PUMP_MAX_AGE_S",
+    "COMPACT_WINDOW",
 ]
 
 #: write-back journal flush thresholds (mirroring AsyncIndexer's defaults;
@@ -72,6 +76,8 @@ WB_MAX_AGE_S = 0.5
 #: replication pump drain thresholds (bounded replica lag)
 PUMP_MAX_PENDING = 64
 PUMP_MAX_AGE_S = 0.05
+#: max raw records one drain coalesces per peer (the compaction window)
+COMPACT_WINDOW = 512
 
 
 class EpochClock:
@@ -197,6 +203,150 @@ class ReplicationLog:
             return drop
 
 
+def _max_epoch(rec: Dict[str, Any]) -> int:
+    """Highest epoch a (possibly multi-entry) record carries."""
+    epoch = int(rec.get("epoch", 0))
+    for entry in rec.get("entries") or []:
+        epoch = max(epoch, int(entry.get("epoch", 0)))
+    return epoch
+
+
+def compact_window(records: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Coalesce one drain window so only the last writer per path survives.
+
+    Input is a contiguous, seq-ordered slice of one DTN's log (epochs are
+    monotone in seq because the DTN's mutation lock serializes tick → mutate
+    → log).  Rules, per path:
+
+    * later ``upsert`` entries replace earlier ones wholesale;
+    * an ``update`` folds into an earlier in-window ``upsert`` of the same
+      path (field-wise: the update's non-None fields and epoch win) and
+      merges field-wise with earlier in-window updates;
+    * ``unlink`` subsumes every earlier in-window record for the path *and*
+      its subtree, but the unlink itself is **always shipped** — the replica
+      needs the tombstone, and rows from earlier windows still need deleting.
+      Records after the unlink (a re-create) survive on their own;
+    * ``index`` (sds) and ``summary`` replacement records keep last-per-key.
+
+    Convergence is byte-identical to shipping the raw window: every dropped
+    record is superseded, within the window, by a shipped record the
+    replica's (epoch, origin) LWW would have preferred anyway.  This relies
+    on hash placement giving each path a single origin DTN — the log being
+    compacted only ever holds one writer's history per path.
+
+    Output is seq-ordered (a merged record takes its last contributor's
+    seq); adjacent surviving meta upserts are re-grouped into multi-entry
+    records so coalescing never multiplies record framing overhead.
+    """
+    # path -> (sort_seq, record) for coalescable slots; unlinks/others append-only
+    meta_slots: Dict[str, Tuple[int, Dict[str, Any]]] = {}
+    sds_slots: Dict[str, Tuple[int, Dict[str, Any]]] = {}
+    summary_slot: Dict[int, Tuple[int, Dict[str, Any]]] = {}
+    keep: List[Tuple[int, Dict[str, Any]]] = []
+
+    def _drop_subtree(prefix_path: str) -> None:
+        sub = prefix_path.rstrip("/") + "/"
+        for path in [p for p in meta_slots if p == prefix_path or p.startswith(sub)]:
+            del meta_slots[path]
+
+    for rec in records:
+        service, op, seq = rec.get("service"), rec.get("op"), int(rec["seq"])
+        if service == "meta" and op == "upsert":
+            for entry in rec.get("entries") or []:
+                single = dict(rec, entries=[dict(entry)], epoch=int(entry["epoch"]))
+                meta_slots[entry["path"]] = (seq, single)
+        elif service == "meta" and op == "update":
+            path = rec["path"]
+            prev = meta_slots.get(path)
+            if prev is not None and prev[1].get("op") == "upsert":
+                entry = dict(prev[1]["entries"][0])
+                entry["epoch"] = int(rec["epoch"])
+                entry["mtime"] = float(rec.get("mtime", entry.get("mtime", 0.0)))
+                if rec.get("size") is not None:
+                    entry["size"] = int(rec["size"])
+                if rec.get("sync") is not None:
+                    entry["sync"] = int(rec["sync"])
+                meta_slots[path] = (seq, dict(prev[1], entries=[entry], epoch=entry["epoch"], seq=seq))
+            elif prev is not None:  # update-over-update: later non-None fields win
+                merged = dict(prev[1])
+                merged.update({k: v for k, v in rec.items() if v is not None})
+                meta_slots[path] = (seq, merged)
+            else:
+                meta_slots[path] = (seq, dict(rec))
+        elif service == "meta" and op == "unlink":
+            _drop_subtree(rec["path"])
+            keep.append((seq, dict(rec)))
+        elif service == "sds" and op in ("index", "index_delta"):
+            sds_slots[rec["path"]] = (seq, dict(rec))
+        elif service == "sds" and op == "summary":
+            summary_slot[int(rec.get("origin", -1))] = (seq, dict(rec))
+        else:  # unknown shape: ship verbatim, never guess
+            keep.append((seq, dict(rec)))
+
+    out = keep + list(meta_slots.values()) + list(sds_slots.values()) + list(summary_slot.values())
+    out.sort(key=lambda item: item[0])
+
+    # re-group adjacent surviving upserts into multi-entry records (framing
+    # overhead back to one record per contiguous run, like batch_upsert logs)
+    grouped: List[Dict[str, Any]] = []
+    for _seq, rec in out:
+        if (
+            grouped
+            and rec.get("service") == "meta"
+            and rec.get("op") == "upsert"
+            and grouped[-1].get("service") == "meta"
+            and grouped[-1].get("op") == "upsert"
+        ):
+            prev_rec = grouped[-1]
+            prev_rec["entries"] = list(prev_rec["entries"]) + list(rec["entries"])
+            prev_rec["epoch"] = max(int(prev_rec["epoch"]), int(rec["epoch"]))
+            prev_rec["seq"] = max(int(prev_rec["seq"]), int(rec["seq"]))
+        else:
+            grouped.append(rec)
+    return grouped
+
+
+class AdaptiveBatcher:
+    """Adapts the pump's drain window from observed per-record drain latency.
+
+    An EWMA over ``elapsed / records`` estimates the marginal cost of one
+    more record in a drain; the window is then sized so a whole drain lands
+    near ``target_s`` — long windows (more coalescing, fewer RPCs) on fast
+    links, short windows (bounded lag) on slow ones.  Clamped to
+    ``[lo, hi]``; starts at ``initial`` until the first observation.
+    """
+
+    def __init__(
+        self,
+        initial: int = COMPACT_WINDOW,
+        *,
+        lo: int = 32,
+        hi: int = 4096,
+        target_s: float = 0.05,
+        alpha: float = 0.3,
+    ):
+        if not (0 < lo <= initial <= hi):
+            raise ValueError(f"need lo <= initial <= hi, got {lo}/{initial}/{hi}")
+        self.lo, self.hi, self.target_s, self.alpha = lo, hi, target_s, alpha
+        self.window = int(initial)
+        self._per_record: Optional[float] = None
+        self.observations = 0
+
+    def record(self, n_records: int, elapsed_s: float) -> int:
+        """Feed one drain's (records shipped, wall seconds); returns window."""
+        if n_records > 0 and elapsed_s >= 0:
+            per = elapsed_s / n_records
+            self._per_record = (
+                per
+                if self._per_record is None
+                else self.alpha * per + (1 - self.alpha) * self._per_record
+            )
+            self.observations += 1
+            if self._per_record > 0:
+                self.window = max(self.lo, min(self.hi, int(self.target_s / self._per_record)))
+        return self.window
+
+
 class ReplicaPump:
     """Drains one DTN's replication log to every peer DTN, asynchronously.
 
@@ -216,7 +366,10 @@ class ReplicaPump:
         max_pending: int = PUMP_MAX_PENDING,
         max_age_s: float = PUMP_MAX_AGE_S,
         poll_s: float = 0.01,
-        batch_limit: int = 512,
+        batch_limit: int = COMPACT_WINDOW,
+        compact: bool = True,
+        deltas: bool = True,
+        adaptive_batch: bool = False,
     ):
         from .plane import ServicePlane  # local import: plane imports nothing from here
 
@@ -227,12 +380,27 @@ class ReplicaPump:
         self.max_age_s = max_age_s
         self.poll_s = poll_s
         self.batch_limit = batch_limit
+        self.compact = compact
+        self.deltas = deltas
+        self.batcher: Optional[AdaptiveBatcher] = (
+            AdaptiveBatcher(batch_limit) if adaptive_batch else None
+        )
         self.plane = ServicePlane(collab, dtn.dc_id, subscribe=False)
         self._cursors: Dict[int, int] = {}  # peer dtn_id -> last seq shipped
+        #: peer dtn_id -> highest epoch fully shipped (the wm stamped on
+        #: non-final window records, so partial windows never inflate the
+        #: receiver's AppliedMap)
+        self._peer_wm: Dict[int, int] = {}
+        #: peer dtn_id -> {path: (epoch, row-tuple multiset base)} — the last
+        #: index replacement set shipped there, the base deltas encode against
+        self._shipped_idx: Dict[int, Dict[str, Tuple[int, List[tuple]]]] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.records_shipped = 0
+        self.records_compacted = 0
+        self.delta_records = 0
+        self.delta_refused = 0
         self.drains = 0
         self.send_errors = 0
 
@@ -266,44 +434,126 @@ class ReplicaPump:
         return age > 0 and age >= self.max_age_s
 
     # -- the drain body --------------------------------------------------------
+    def _encode_for_peer(
+        self, peer: int, ship: List[Dict[str, Any]]
+    ) -> Tuple[List[Dict[str, Any]], Dict[str, Dict[str, Any]], Dict[str, Tuple[int, List[tuple]]], int]:
+        """Watermark-stamp a compacted window and delta-encode index records.
+
+        Returns ``(records, full_by_path, staged_bases, window_max)``:
+        ``full_by_path`` holds the full replacement record for every path
+        shipped as a delta (the ``need_full`` fallback), ``staged_bases`` the
+        per-path bases to commit into :attr:`_shipped_idx` once the window
+        fully lands.
+        """
+        wm_prev = self._peer_wm.get(peer, 0)
+        window_max = max((_max_epoch(r) for r in ship), default=wm_prev)
+        bases = self._shipped_idx.setdefault(peer, {})
+        out: List[Dict[str, Any]] = []
+        full_by_path: Dict[str, Dict[str, Any]] = {}
+        staged: Dict[str, Tuple[int, List[tuple]]] = {}
+        last = len(ship) - 1
+        for i, rec in enumerate(ship):
+            rec = dict(rec, wm=window_max if i == last else wm_prev)
+            if rec.get("service") == "sds" and rec.get("op") == "index":
+                path = rec["path"]
+                rows = [tuple(r) for r in rec.get("rows") or []]
+                staged[path] = (int(rec["epoch"]), rows)
+                base = bases.get(path)
+                # the final record carries the window watermark and must
+                # never be refused (need_full would leave the watermark
+                # claiming rows the replica does not hold yet), so it always
+                # ships full
+                if self.deltas and base is not None and i != last:
+                    base_epoch, base_rows = base
+                    want, have = Counter(rows), Counter(base_rows)
+                    add = list((want - have).elements())
+                    remove = list((have - want).elements())
+                    if len(add) + len(remove) < len(rows):
+                        full_by_path[path] = rec
+                        rec = {
+                            "service": "sds",
+                            "op": "index_delta",
+                            "path": path,
+                            "base": base_epoch,
+                            "add": [list(r) for r in add],
+                            "del": [list(r) for r in remove],
+                            "epoch": rec["epoch"],
+                            "origin": rec["origin"],
+                            "seq": rec["seq"],
+                            "wm": rec["wm"],
+                        }
+                        self.delta_records += 1
+            out.append(rec)
+        return out, full_by_path, staged, window_max
+
+    def _ship_window(self, peer: int, records: List[Dict[str, Any]], full_by_path: Dict[str, Dict[str, Any]]) -> bool:
+        """Ship one window as same-service runs in log order; True iff all landed."""
+        runs: List[Tuple[str, List[Dict[str, Any]]]] = []
+        for r in records:
+            if runs and runs[-1][0] == r.get("service"):
+                runs[-1][1].append(r)
+            else:
+                runs.append((r.get("service"), [r]))
+        for service, run in runs:
+            method = "apply_replicated" if service == "meta" else "apply_replicated_index"
+            try:
+                reply = self.plane.call(service, peer, method, records=run)
+            except RpcError:
+                self.send_errors += 1
+                return False
+            need_full = (reply or {}).get("need_full") if isinstance(reply, dict) else None
+            if need_full:
+                # the replica's base diverged (crash/restore, missed state):
+                # re-ship those paths as full replacement sets immediately
+                self.delta_refused += len(need_full)
+                reships = [full_by_path[p] for p in need_full if p in full_by_path]
+                if len(reships) != len(need_full):
+                    return False  # a path we cannot re-ship: keep the cursor
+                try:
+                    self.plane.call(service, peer, method, records=reships)
+                except RpcError:
+                    self.send_errors += 1
+                    return False
+        return True
+
     def drain(self) -> int:
         """Ship pending records to every lagging peer; returns records sent.
 
-        Per peer, the window ships as contiguous same-service runs **in log
-        order** (metadata and discovery records interleave on one log but
-        target different servers).  A run failure stops that peer's window:
-        the cursor advances only past fully-applied runs, so the receiver's
-        AppliedMap watermark — which rises as records apply — can never
-        claim an epoch whose earlier records are still unsent.
+        Per peer: take the unshipped window (bounded by the compaction
+        window / adaptive batcher), coalesce it with :func:`compact_window`,
+        delta-encode index records against the previously shipped version,
+        and ship as contiguous same-service runs **in log order** (metadata
+        and discovery records interleave on one log but target different
+        servers).  The window is all-or-nothing per peer: the cursor, the
+        shipped-watermark and the delta bases advance only when every run
+        (and every ``need_full`` re-ship) landed — a compacted record can
+        merge several raw mutations, so there is no meaningful "partially
+        applied" cursor position inside a window.
         """
+        self.dtn.discovery.log_summary_if_dirty()
         sent_total = 0
         for p in self._peers():
             with self._lock:
                 cur = self._cursors.get(p, 0)
-            recs = self.log.since(cur, limit=self.batch_limit)
+            limit = self.batcher.window if self.batcher is not None else self.batch_limit
+            recs = self.log.since(cur, limit=limit)
             if not recs:
                 continue
-            runs: List[Tuple[str, List[Dict[str, Any]]]] = []
-            for r in recs:
-                if runs and runs[-1][0] == r.get("service"):
-                    runs[-1][1].append(r)
-                else:
-                    runs.append((r.get("service"), [r]))
-            advanced = cur
-            for service, run in runs:
-                method = (
-                    "apply_replicated" if service == "meta" else "apply_replicated_index"
-                )
-                try:
-                    self.plane.call(service, p, method, records=run)
-                except RpcError:
-                    self.send_errors += 1
-                    break
-                advanced = run[-1]["seq"]
+            t0 = time.perf_counter()
+            window_end = int(recs[-1]["seq"])
+            ship = compact_window(recs) if self.compact else [dict(r) for r in recs]
+            self.records_compacted += len(recs) - len(ship)
+            records, full_by_path, staged, window_max = self._encode_for_peer(p, ship)
+            if not self._ship_window(p, records, full_by_path):
+                continue
             with self._lock:
-                if advanced > self._cursors.get(p, 0):
-                    sent_total += advanced - self._cursors.get(p, 0)
-                    self._cursors[p] = advanced
+                if window_end > self._cursors.get(p, 0):
+                    sent_total += window_end - self._cursors.get(p, 0)
+                    self._cursors[p] = window_end
+                self._peer_wm[p] = max(self._peer_wm.get(p, 0), window_max)
+                self._shipped_idx.setdefault(p, {}).update(staged)
+            if self.batcher is not None:
+                self.batcher.record(len(recs), time.perf_counter() - t0)
         self.records_shipped += sent_total
         self.drains += 1
         self.log.truncate_upto(self.min_cursor(include_down=True))
@@ -345,11 +595,20 @@ class ReplicaPump:
         if drain:
             self.drain()
 
+    def bytes_shipped(self) -> int:
+        """Wire bytes this pump's own clients pushed (requests only)."""
+        return sum(c.stats.bytes_sent for c in self.plane.clients())
+
     def stats(self) -> Dict[str, float]:
         return {
             "dtn_id": self.dtn.dtn_id,
             "lag_records": self.lag(),
             "records_shipped": self.records_shipped,
+            "records_compacted": self.records_compacted,
+            "delta_records": self.delta_records,
+            "delta_refused": self.delta_refused,
+            "bytes_shipped": self.bytes_shipped(),
+            "window": self.batcher.window if self.batcher is not None else self.batch_limit,
             "drains": self.drains,
             "send_errors": self.send_errors,
         }

@@ -11,6 +11,29 @@ injectable so benchmarks can model intra-DC vs cross-DC links.
 
 A real deployment would swap :class:`RpcClient`/:class:`RpcServer` for gRPC
 stubs; every service in :mod:`repro.core` talks only through this interface.
+
+Wire-format fast path
+---------------------
+The wire format is unchanged (1 tag byte, type-specific payload, length-
+prefixed containers) but the codec has two implementations:
+
+* :func:`pack` — the fast path: appends into a ``bytearray`` through
+  pre-bound :class:`struct.Struct` instances that fuse the tag byte with its
+  payload (``<cq``/``<cd``/``<cI``), with exact-type dispatch before the
+  ``isinstance`` fallback.  :func:`pack_flat` specializes further for flat
+  record dicts (str keys, scalar values) — the shape replication records and
+  attribute rows take — skipping recursive dispatch entirely.
+* :func:`pack_recursive` — the original ``io.BytesIO`` recursive packer,
+  kept as the benchmark baseline (``benchmarks/fig11_wirepath.py``) and the
+  byte-for-byte reference the property tests pin the fast path against.
+
+:func:`unpack` walks a :class:`memoryview` with integer offsets instead of a
+stream object; ``str`` payloads decode straight out of the view and ``bytes``
+payloads can be returned as zero-copy subviews (``copy=False``, used on the
+hot request/response path).  Malformed or truncated buffers raise
+:class:`CodecError` — a :class:`RpcError` *and* ``ValueError`` — carrying the
+byte offset where decoding failed, and nesting is bounded by a recursion-depth
+guard so hostile buffers cannot blow the interpreter stack.
 """
 
 from __future__ import annotations
@@ -24,11 +47,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "pack",
+    "pack_flat",
+    "pack_recursive",
     "unpack",
     "Channel",
     "RpcServer",
     "RpcClient",
     "RpcError",
+    "CodecError",
     "RpcFuture",
     "RpcPipeline",
     "RpcStats",
@@ -52,8 +78,215 @@ _T_BYTES = b"B"
 _T_LIST = b"L"
 _T_DICT = b"M"
 
+#: Maximum container nesting the codec will pack or unpack.  Messages in this
+#: system are at most a handful of levels deep (batch → op → kwargs → rows);
+#: anything deeper is a bug or a hostile buffer, not a workload.
+_MAX_DEPTH = 32
 
-def _pack_into(buf: io.BytesIO, obj: Any) -> None:
+# Pre-bound structs; the <c?> variants fuse the tag byte with its payload so a
+# scalar lands in the buffer with a single append.  The bare ``.pack`` bound
+# methods skip one attribute lookup per element on the hot path.
+_S_I = struct.Struct("<I")
+_S_TAG_INT = struct.Struct("<cq")
+_S_TAG_FLOAT = struct.Struct("<cd")
+_S_TAG_LEN = struct.Struct("<cI")
+_S_Q = struct.Struct("<q")
+_S_D = struct.Struct("<d")
+_P_I = _S_I.pack
+_P_TAG_INT = _S_TAG_INT.pack
+_P_TAG_FLOAT = _S_TAG_FLOAT.pack
+_P_TAG_LEN = _S_TAG_LEN.pack
+
+#: Memoized wire encoding of dict keys (length prefix + utf-8 bytes).  Keys
+#: are drawn from a small fixed vocabulary — method names, record fields —
+#: so the cache converges after a handful of messages; the size cap only
+#: guards against a pathological workload using unbounded key sets.
+_KEY_CACHE: Dict[str, bytes] = {}
+_KEY_CACHE_MAX = 4096
+
+#: Memoized wire encoding of *short string values* (tag + length + utf-8).
+#: Metadata traffic repeats the same strings constantly — attribute names
+#: and type tags in index rows, owners/DC ids in entries, and every path
+#: re-shipped once per replica peer — so most string fields reduce to one
+#: dict hit and one buffer append.  Long strings (> 64 chars) bypass the
+#: cache: they amortize their encode cost and would evict useful entries.
+_STR_CACHE: Dict[str, bytes] = {}
+_STR_CACHE_MAX = 4096
+_STR_CACHE_MAXLEN = 64
+
+
+def _key_bytes(key: Any) -> bytes:
+    if not isinstance(key, str):
+        raise TypeError(f"message dict keys must be str, got {type(key)!r}")
+    raw = key.encode("utf-8")
+    enc = _P_I(len(raw)) + raw
+    if len(_KEY_CACHE) < _KEY_CACHE_MAX:
+        _KEY_CACHE[key] = enc
+    return enc
+
+
+def _str_bytes(value: str) -> bytes:
+    raw = value.encode("utf-8")
+    enc = _P_TAG_LEN(_T_STR, len(raw)) + raw
+    if len(value) <= _STR_CACHE_MAXLEN and len(_STR_CACHE) < _STR_CACHE_MAX:
+        _STR_CACHE[value] = enc
+    return enc
+
+
+class RpcError(RuntimeError):
+    """A remote call failed; carries the remote exception message."""
+
+
+class CodecError(RpcError, ValueError):
+    """Malformed, truncated, or over-nested wire buffer.
+
+    Subclasses both :class:`RpcError` (so RPC-layer callers see one failure
+    type) and ``ValueError`` (so pre-existing recovery code that catches
+    ``(ValueError, struct.error)`` — e.g. the write-back journal's torn-tail
+    scan — keeps working).  The message carries the byte offset at which
+    decoding failed.
+    """
+
+
+def _pack_scalar(out: bytearray, obj: Any) -> bool:
+    """Append one scalar to ``out``; return ``False`` for non-scalars."""
+    t = type(obj)
+    if obj is None:
+        out += _T_NONE
+    elif obj is True:
+        out += _T_TRUE
+    elif obj is False:
+        out += _T_FALSE
+    elif t is int:
+        out += _S_TAG_INT.pack(_T_INT, obj)
+    elif t is float:
+        out += _S_TAG_FLOAT.pack(_T_FLOAT, obj)
+    elif t is str:
+        raw = obj.encode("utf-8")
+        out += _S_TAG_LEN.pack(_T_STR, len(raw))
+        out += raw
+    elif t is bytes or t is bytearray or t is memoryview:
+        out += _S_TAG_LEN.pack(_T_BYTES, len(obj))
+        out += obj
+    elif isinstance(obj, int):  # int subclasses (IntEnum, ...)
+        out += _S_TAG_INT.pack(_T_INT, int(obj))
+    elif isinstance(obj, float):  # float subclasses (np.float64, ...)
+        out += _S_TAG_FLOAT.pack(_T_FLOAT, float(obj))
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        out += _S_TAG_LEN.pack(_T_STR, len(raw))
+        out += raw
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        raw = bytes(obj)
+        out += _S_TAG_LEN.pack(_T_BYTES, len(raw))
+        out += raw
+    else:
+        return False
+    return True
+
+
+def _pack_into(out: bytearray, obj: Any, depth: int = 0) -> None:
+    # The scalar dispatch is INLINED inside both container loops: a function
+    # call per element is exactly the overhead that made the recursive packer
+    # slow, so the hot loops pay only an exact-class check and one fused
+    # Struct append per value.  Anything unusual (scalar subclasses, nested
+    # containers) falls through to the full dispatch below / recursion.
+    t = obj.__class__
+    if t is dict:
+        if depth >= _MAX_DEPTH:
+            raise CodecError(f"message nesting exceeds depth limit {_MAX_DEPTH}")
+        out += _P_TAG_LEN(_T_DICT, len(obj))
+        depth += 1
+        key_cache = _KEY_CACHE
+        str_cache = _STR_CACHE
+        for key, value in obj.items():
+            enc = key_cache.get(key)
+            out += enc if enc is not None else _key_bytes(key)
+            vt = value.__class__
+            if vt is str:
+                enc = str_cache.get(value)
+                out += enc if enc is not None else _str_bytes(value)
+            elif vt is int:
+                out += _P_TAG_INT(_T_INT, value)
+            elif vt is bool:
+                out += _T_TRUE if value else _T_FALSE
+            elif value is None:
+                out += _T_NONE
+            elif vt is float:
+                out += _P_TAG_FLOAT(_T_FLOAT, value)
+            else:
+                _pack_into(out, value, depth)
+        return
+    if t is list or t is tuple:
+        if depth >= _MAX_DEPTH:
+            raise CodecError(f"message nesting exceeds depth limit {_MAX_DEPTH}")
+        out += _P_TAG_LEN(_T_LIST, len(obj))
+        depth += 1
+        str_cache = _STR_CACHE
+        for value in obj:
+            vt = value.__class__
+            if vt is str:
+                enc = str_cache.get(value)
+                out += enc if enc is not None else _str_bytes(value)
+            elif vt is int:
+                out += _P_TAG_INT(_T_INT, value)
+            elif vt is bool:
+                out += _T_TRUE if value else _T_FALSE
+            elif value is None:
+                out += _T_NONE
+            elif vt is float:
+                out += _P_TAG_FLOAT(_T_FLOAT, value)
+            else:
+                _pack_into(out, value, depth)
+        return
+    if _pack_scalar(out, obj):
+        return
+    raise TypeError(f"unsupported message field type: {type(obj)!r}")
+
+
+def pack(obj: Any) -> bytes:
+    """Serialize a message object (nested dict/list of primitives) to bytes."""
+    out = bytearray()
+    _pack_into(out, obj)
+    return bytes(out)
+
+
+def pack_flat(record: Dict[str, Any]) -> bytes:
+    """Non-recursive :func:`pack` for flat record dicts (str → scalar).
+
+    Byte-identical to ``pack(record)``; raises :class:`CodecError` if any
+    value is a container (callers fall back to :func:`pack`).  This is the
+    shape replication log records and attribute rows take on the wire, so the
+    pump and journal hit this path for the bulk of shipped bytes.
+    """
+    out = bytearray()
+    out += _P_TAG_LEN(_T_DICT, len(record))
+    key_cache = _KEY_CACHE
+    str_cache = _STR_CACHE
+    for key, value in record.items():
+        enc = key_cache.get(key)
+        out += enc if enc is not None else _key_bytes(key)
+        vt = value.__class__
+        if vt is str:
+            enc = str_cache.get(value)
+            out += enc if enc is not None else _str_bytes(value)
+        elif vt is int:
+            out += _P_TAG_INT(_T_INT, value)
+        elif vt is bool:
+            out += _T_TRUE if value else _T_FALSE
+        elif value is None:
+            out += _T_NONE
+        elif vt is float:
+            out += _P_TAG_FLOAT(_T_FLOAT, value)
+        elif not _pack_scalar(out, value):
+            raise CodecError(
+                f"pack_flat: container value for key {key!r} ({type(value).__name__}); "
+                "use pack() for nested messages"
+            )
+    return bytes(out)
+
+
+def _pack_into_recursive(buf: io.BytesIO, obj: Any) -> None:
     if obj is None:
         buf.write(_T_NONE)
     elif obj is True:
@@ -80,7 +313,7 @@ def _pack_into(buf: io.BytesIO, obj: Any) -> None:
         buf.write(_T_LIST)
         buf.write(struct.pack("<I", len(obj)))
         for item in obj:
-            _pack_into(buf, item)
+            _pack_into_recursive(buf, item)
     elif isinstance(obj, dict):
         buf.write(_T_DICT)
         buf.write(struct.pack("<I", len(obj)))
@@ -90,53 +323,109 @@ def _pack_into(buf: io.BytesIO, obj: Any) -> None:
             raw = key.encode("utf-8")
             buf.write(struct.pack("<I", len(raw)))
             buf.write(raw)
-            _pack_into(buf, value)
+            _pack_into_recursive(buf, value)
     else:
         raise TypeError(f"unsupported message field type: {type(obj)!r}")
 
 
-def pack(obj: Any) -> bytes:
-    """Serialize a message object (nested dict/list of primitives) to bytes."""
+def pack_recursive(obj: Any) -> bytes:
+    """The original stream-based recursive packer (fig11 baseline).
+
+    Kept verbatim so benchmarks can measure the fast path against the exact
+    code the seed shipped, and so property tests can pin byte-for-byte
+    equality between the two implementations.
+    """
     buf = io.BytesIO()
-    _pack_into(buf, obj)
+    _pack_into_recursive(buf, obj)
     return buf.getvalue()
 
 
-def _unpack_from(buf: io.BytesIO) -> Any:
-    tag = buf.read(1)
-    if tag == _T_NONE:
-        return None
-    if tag == _T_TRUE:
-        return True
-    if tag == _T_FALSE:
-        return False
-    if tag == _T_INT:
-        return struct.unpack("<q", buf.read(8))[0]
-    if tag == _T_FLOAT:
-        return struct.unpack("<d", buf.read(8))[0]
-    if tag == _T_STR:
-        (n,) = struct.unpack("<I", buf.read(4))
-        return buf.read(n).decode("utf-8")
-    if tag == _T_BYTES:
-        (n,) = struct.unpack("<I", buf.read(4))
-        return buf.read(n)
-    if tag == _T_LIST:
-        (n,) = struct.unpack("<I", buf.read(4))
-        return [_unpack_from(buf) for _ in range(n)]
-    if tag == _T_DICT:
-        (n,) = struct.unpack("<I", buf.read(4))
-        out = {}
+def _need(mv: memoryview, pos: int, n: int, what: str) -> int:
+    """Bounds-check ``n`` bytes at ``pos``; return the new offset."""
+    end = pos + n
+    if end > len(mv):
+        raise CodecError(
+            f"truncated message: need {n} byte(s) for {what} at offset {pos}, "
+            f"have {len(mv) - pos}"
+        )
+    return end
+
+
+def _unpack_from(mv: memoryview, pos: int, depth: int, copy: bool) -> Tuple[Any, int]:
+    end = _need(mv, pos, 1, "tag")
+    tag = mv[pos]
+    pos = end
+    if tag == 0x4E:  # N — None
+        return None, pos
+    if tag == 0x54:  # T — True
+        return True, pos
+    if tag == 0x46:  # F — False
+        return False, pos
+    if tag == 0x49:  # I — int64
+        end = _need(mv, pos, 8, "int payload")
+        return _S_Q.unpack_from(mv, pos)[0], end
+    if tag == 0x44:  # D — float64
+        end = _need(mv, pos, 8, "float payload")
+        return _S_D.unpack_from(mv, pos)[0], end
+    if tag == 0x53:  # S — str
+        end = _need(mv, pos, 4, "str length")
+        (n,) = _S_I.unpack_from(mv, pos)
+        pos, end = end, _need(mv, end, n, "str payload")
+        try:
+            return str(mv[pos:end], "utf-8"), end
+        except UnicodeDecodeError as exc:
+            raise CodecError(f"corrupt str payload at offset {pos}: {exc}") from exc
+    if tag == 0x42:  # B — bytes
+        end = _need(mv, pos, 4, "bytes length")
+        (n,) = _S_I.unpack_from(mv, pos)
+        pos, end = end, _need(mv, end, n, "bytes payload")
+        return (mv[pos:end] if not copy else bytes(mv[pos:end])), end
+    if tag == 0x4C:  # L — list
+        if depth >= _MAX_DEPTH:
+            raise CodecError(f"message nesting exceeds depth limit {_MAX_DEPTH} at offset {pos - 1}")
+        end = _need(mv, pos, 4, "list length")
+        (n,) = _S_I.unpack_from(mv, pos)
+        pos = end
+        out_list = []
+        append = out_list.append
         for _ in range(n):
-            (k,) = struct.unpack("<I", buf.read(4))
-            key = buf.read(k).decode("utf-8")
-            out[key] = _unpack_from(buf)
-        return out
-    raise ValueError(f"corrupt message: unknown tag {tag!r}")
+            item, pos = _unpack_from(mv, pos, depth + 1, copy)
+            append(item)
+        return out_list, pos
+    if tag == 0x4D:  # M — dict
+        if depth >= _MAX_DEPTH:
+            raise CodecError(f"message nesting exceeds depth limit {_MAX_DEPTH} at offset {pos - 1}")
+        end = _need(mv, pos, 4, "dict length")
+        (n,) = _S_I.unpack_from(mv, pos)
+        pos = end
+        out: Dict[str, Any] = {}
+        for _ in range(n):
+            end = _need(mv, pos, 4, "key length")
+            (k,) = _S_I.unpack_from(mv, pos)
+            pos, end = end, _need(mv, end, k, "key payload")
+            try:
+                key = str(mv[pos:end], "utf-8")
+            except UnicodeDecodeError as exc:
+                raise CodecError(f"corrupt dict key at offset {pos}: {exc}") from exc
+            pos = end
+            out[key], pos = _unpack_from(mv, pos, depth + 1, copy)
+        return out, pos
+    raise CodecError(f"corrupt message: unknown tag {bytes((tag,))!r} at offset {pos - 1}")
 
 
-def unpack(data: bytes) -> Any:
-    """Inverse of :func:`pack`."""
-    return _unpack_from(io.BytesIO(data))
+def unpack(data: Any, *, copy: bool = True) -> Any:
+    """Inverse of :func:`pack`.
+
+    Walks a :class:`memoryview` over ``data`` with integer offsets — no
+    stream object, no per-field ``read`` calls.  With ``copy=False``, bytes
+    payloads come back as zero-copy subviews of ``data`` (valid as long as
+    ``data`` is; the RPC hot path uses this since request/response buffers
+    outlive their dispatch).  Truncated or malformed input raises
+    :class:`CodecError` with the failing byte offset.
+    """
+    mv = data if isinstance(data, memoryview) else memoryview(data)
+    obj, _pos = _unpack_from(mv, 0, 0, copy)
+    return obj
 
 
 # ---------------------------------------------------------------------------
@@ -177,10 +466,6 @@ LOOPBACK = Channel(name="loopback")
 # ---------------------------------------------------------------------------
 # Client / server
 # ---------------------------------------------------------------------------
-
-
-class RpcError(RuntimeError):
-    """A remote call failed; carries the remote exception message."""
 
 
 @dataclass
@@ -232,7 +517,9 @@ class RpcServer:
     def handle(self, request: bytes) -> bytes:
         if self.down:
             return pack({"ok": False, "error": f"ServiceDown: {self.name} is unreachable"})
-        req = unpack(request)
+        # zero-copy: bytes payloads (file writes, scidata blobs) dispatch into
+        # the service as subviews of the request buffer, never re-copied
+        req = unpack(request, copy=False)
         if self.clock is not None and req.get("epoch"):
             self.clock.observe(int(req["epoch"]))
         if "batch" in req:
@@ -304,6 +591,9 @@ class RpcClient:
         #: highest epoch witnessed in this server's reply envelopes — the
         #: session-consistency bar for replica reads of rows it originates
         self.last_epoch = 0
+        # reusable request framer: capacity persists across calls, so batch
+        # frames stop paying per-call buffer growth once warmed up
+        self._frame = bytearray()
 
     def _round_trip(
         self, message: Dict[str, Any], n_ops: int, defer_wire: bool = False
@@ -320,7 +610,10 @@ class RpcClient:
         t0 = time.perf_counter()
         if self.last_epoch:
             message = dict(message, epoch=self.last_epoch)
-        request = pack(message)
+        frame = self._frame
+        del frame[:]
+        _pack_into(frame, message)
+        request = bytes(frame)
         t1 = time.perf_counter()
         if defer_wire:
             wire = self.channel.delay_for(len(request))
@@ -332,7 +625,7 @@ class RpcClient:
             self.channel.transmit(len(response))
             wire = time.perf_counter() - t1
         t2 = time.perf_counter()
-        resp = unpack(response)
+        resp = unpack(response, copy=False)
         t3 = time.perf_counter()
         if resp.get("epoch"):
             self.last_epoch = max(self.last_epoch, int(resp["epoch"]))

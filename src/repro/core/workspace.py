@@ -83,6 +83,8 @@ class Workspace:
         wb_max_pending: Optional[int] = None,
         wb_max_age_s: Optional[float] = None,
         prefer_replica: bool = False,
+        prune_queries: bool = True,
+        summary_ttl_s: Optional[float] = None,
     ):
         if extraction_mode not in ExtractionMode.ALL:
             raise ValueError(f"unknown extraction mode {extraction_mode!r}")
@@ -94,6 +96,7 @@ class Workspace:
         self.pipeline = pipeline
         self.write_back = write_back
         self.prefer_replica = prefer_replica
+        self.prune_queries = prune_queries
         # All service interaction goes through the metadata plane: pooled
         # per-DTN clients, batched RPC, bounded scatter-gather, attr cache,
         # and (write_back) the crash-recoverable journal with count/age
@@ -109,6 +112,8 @@ class Workspace:
             plane_kwargs["wb_max_pending"] = wb_max_pending
         if wb_max_age_s is not None:
             plane_kwargs["wb_max_age_s"] = wb_max_age_s
+        if summary_ttl_s is not None:
+            plane_kwargs["summary_ttl_s"] = summary_ttl_s
         self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
         self._data_channels: Dict[str, Channel] = {
             dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
@@ -356,9 +361,20 @@ class Workspace:
         if any origin this client has witnessed is not yet applied there,
         the result may miss those writes and the query falls back to the
         full fan-out.
+
+        The fan-out itself is **shard-pruned**: each discovery reply
+        piggybacks the shard's bloom summary (and the replication log ships
+        every shard's summary to every replica), so the plane accumulates a
+        filter per shard.  Before fanning out, the plan drops every
+        (shard, predicate) pair the summaries prove cannot match — bloom
+        bits are one-sided, so a skip is never wrong — and a predicate with
+        zero candidate shards short-circuits the whole query to ``[]`` with
+        zero RPCs.  Missing or stale summaries degrade to the plain full
+        pushdown, never to a wrong answer.
         """
         plan = plan_query(query)
-        msg = {"predicates": plan.predicate_messages()}
+        all_preds = plan.predicate_messages()
+        msg = {"predicates": all_preds}
         if self.prefer_replica and self.collab.replication_enabled and self.plane.local_dtns:
             nearest = self.plane.local_dtns[0]
             reply = self.plane.sds_call(nearest, "scatter_query", **msg)
@@ -368,6 +384,7 @@ class Workspace:
                 for i, bar in self.plane.seen_epochs().items()
                 if bar > 0 and i != nearest
             )
+            self.plane.note_summary(nearest, reply)
             if fresh:
                 paths = set(plan.merge([reply["matches"]]))
                 return [
@@ -376,12 +393,59 @@ class Workspace:
                     if row["path"] in paths
                 ]
             self.plane.replica_stale_fallbacks += 1
-        per_dtn = self.plane.scatter("sds", "scatter_query", msg)
-        paths = set(plan.merge([r["matches"] for r in per_dtn]))
+        n_shards = self.plane.n_dtns()
+        summaries = (
+            self.plane.fresh_summaries() if self.prune_queries else {}
+        )  # TTL-cache reuse (opt-in)
+        if (
+            self.prune_queries
+            and len(summaries) < n_shards
+            and self.collab.replication_enabled
+            and self.plane.local_dtns
+        ):
+            # one intra-DC RPC fetches every shard's filter from a home-DC
+            # replica (the replication log ships + maintains them there);
+            # each filter is session-gated on the replica's applied map
+            warmed = self.plane.note_summaries_bulk(
+                self.plane.sds_call(self.plane.local_dtns[0], "summaries")
+            )
+            warmed.update(summaries)
+            summaries = warmed
+        decision = plan.prune(summaries, n_shards)
+        self.plane.shard_contacts += decision.contacted()
+        self.plane.shards_pruned += decision.pruned_shards
+        if decision.empty:
+            # some predicate has zero candidate shards ⇒ the conjunction is
+            # provably empty; answered without contacting any shard
+            self.plane.pruned_empty_queries += 1
+            return []
+        per_dtn = self.plane.scatter(
+            "sds",
+            "scatter_query",
+            per_dtn_kwargs={
+                i: {"predicates": [all_preds[j] for j in idxs]}
+                for i, idxs in decision.send.items()
+            },
+        )
+        # re-inflate each reply's match lists to global predicate positions:
+        # a pruned (shard, predicate) pair contributes the empty set its
+        # summary proved, so the union-then-intersect merge is unchanged
+        matrices: List[List[List[str]]] = []
+        for i, reply in enumerate(per_dtn):
+            if reply is None:
+                continue
+            self.plane.note_summary(i, reply)
+            full = [[] for _ in all_preds]
+            for k, j in enumerate(decision.send[i]):
+                full[j] = reply["matches"][k]
+            matrices.append(full)
+        paths = set(plan.merge(matrices))
         if not paths:
             return []
         merged: Dict[str, Dict[str, Any]] = {}
         for reply in per_dtn:
+            if reply is None:
+                continue
             for row in reply["rows"]:
                 if row["path"] in paths:
                     merged.setdefault(row["path"], {}).update(row["attrs"])

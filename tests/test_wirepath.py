@@ -1,0 +1,444 @@
+"""Cross-DC wire-path acceleration: codec fast path, compacted/delta
+shipping, shard-pruning query summaries.
+
+The contracts under test:
+
+- the fast packer and the recursive reference packer are byte-for-byte
+  identical on every message either can express (property-tested), so the
+  perf fast path can never change what crosses the wire;
+- malformed, truncated, or over-nested buffers raise :class:`CodecError`
+  with the failing byte offset instead of crashing or looping;
+- path compaction and delta shipping are invisible to replicas: the same
+  workload shipped compacted or raw converges every DTN to the identical
+  LWW state, including across a mid-stream DTN crash/restart;
+- shard pruning never changes query answers — it only skips shards whose
+  bloom summaries *prove* they cannot match — and a predicate with zero
+  candidate shards short-circuits to an empty result with no fan-out.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Collaboration, Workspace
+from repro.core.query import (
+    SUMMARY_BITS,
+    PruneDecision,
+    ShardSummary,
+    plan_query,
+    summary_terms_for_row,
+)
+from repro.core.replication import COMPACT_WINDOW, AdaptiveBatcher, compact_window
+from repro.core.rpc import (
+    CodecError,
+    RpcError,
+    pack,
+    pack_flat,
+    pack_recursive,
+    unpack,
+)
+
+
+def _replicated_collab(n_dcs=2, dtns_per_dc=2, **pump_kwargs):
+    c = Collaboration()
+    for i in range(n_dcs):
+        c.add_datacenter(f"dc{i}", n_dtns=dtns_per_dc)
+    kw = dict(max_age_s=0.02, poll_s=0.005)
+    kw.update(pump_kwargs)
+    c.start_replication(**kw)
+    return c
+
+
+def _attr_tables(collab, *, include_mtime=True):
+    where = "" if include_mtime else " WHERE attr_name != 'fs.mtime'"
+    return [
+        dtn.discovery_shard.execute(
+            "SELECT path, attr_name, attr_type, value_int, value_real, value_text,"
+            f" origin, epoch FROM attributes{where} ORDER BY path, origin, attr_name, epoch"
+        )
+        for dtn in collab.dtns
+    ]
+
+
+# -- codec: fast path == recursive reference ----------------------------------
+
+def test_fast_pack_matches_recursive_on_representative_messages():
+    msgs = [
+        None, True, False, 0, -1, 2**62, 0.5, "", "héllo", b"\x00\xff",
+        [], {}, [1, "a", None, [2.5, {"k": b"v"}]],
+        {"method": "getattr", "kwargs": {"path": "/a/b"}, "epoch": 12},
+        {"rows": [["lvl", "int", 4, None, None], ["s", "text", None, None, "x"]]},
+        {"nested": {"deep": {"list": [(1, 2), (3,)]}}},
+    ]
+    for m in msgs:
+        assert pack(m) == pack_recursive(m), m
+        # and the bytes actually round-trip
+        unpack(pack(m))
+
+
+def test_pack_flat_matches_pack_on_flat_records():
+    rec = {
+        "service": "sds", "op": "index", "path": "/p/f.sci",
+        "epoch": 42, "origin": 3, "seq": 7, "wm": 40,
+        "ok": True, "ratio": 0.25, "note": None, "blob": b"xyz",
+    }
+    assert pack_flat(rec) == pack(rec) == pack_recursive(rec)
+
+
+def test_pack_flat_rejects_containers():
+    with pytest.raises(CodecError):
+        pack_flat({"rows": [[1, 2]]})
+
+
+def test_string_interning_caches_do_not_change_bytes():
+    # pack the same message twice: the second pass is served from the key and
+    # short-string caches and must produce the identical frame
+    msg = {"path": "/cache/hit.sci", "site": "s3", "owner": "alice", "n": 1}
+    first = pack(msg)
+    assert pack(msg) == first == pack_recursive(msg)
+
+
+try:  # property tests need hypothesis; everything else in this file does not
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _scalar = st.one_of(
+        st.none(),
+        st.booleans(),
+        st.integers(min_value=-(2**62), max_value=2**62),
+        st.floats(allow_nan=False, allow_infinity=False),
+        st.text(max_size=80),  # straddles the intern-cache length cutoff
+        st.binary(max_size=64),
+    )
+    _msg = st.recursive(
+        _scalar,
+        lambda inner: st.one_of(
+            st.lists(inner, max_size=5),
+            st.dictionaries(st.text(max_size=8), inner, max_size=5),
+        ),
+        max_leaves=20,
+    )
+
+    @given(_msg)
+    @settings(max_examples=200, deadline=None)
+    def test_property_fast_pack_is_byte_identical_to_recursive(obj):
+        assert pack(obj) == pack_recursive(obj)
+
+    @given(st.dictionaries(st.text(max_size=12), _scalar, max_size=8))
+    @settings(max_examples=200, deadline=None)
+    def test_property_pack_flat_is_byte_identical_on_flat_records(rec):
+        assert pack_flat(rec) == pack_recursive(rec)
+
+else:  # keep the property contract visible in test listings when skipped
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_fast_pack_is_byte_identical_to_recursive():
+        pass
+
+    # randomized fallback so the byte-identity property still gets *some*
+    # fuzz coverage on hypothesis-less hosts
+    def test_fuzz_fast_pack_matches_recursive_without_hypothesis():
+        import random
+
+        rng = random.Random(0xC0DEC)
+
+        def rand_scalar():
+            return rng.choice([
+                None, True, False, rng.randint(-(2**62), 2**62),
+                rng.random() * 1e9, "s" * rng.randint(0, 80),
+                bytes(rng.randrange(256) for _ in range(rng.randint(0, 32))),
+            ])
+
+        def rand_msg(depth=0):
+            if depth >= 3 or rng.random() < 0.5:
+                return rand_scalar()
+            if rng.random() < 0.5:
+                return [rand_msg(depth + 1) for _ in range(rng.randint(0, 5))]
+            return {
+                "k%d" % i: rand_msg(depth + 1) for i in range(rng.randint(0, 5))
+            }
+
+        for _ in range(300):
+            obj = rand_msg()
+            assert pack(obj) == pack_recursive(obj)
+
+
+# -- codec: hardened unpack ---------------------------------------------------
+
+def test_unpack_truncated_buffer_reports_offset():
+    frame = pack({"k": 12345})
+    with pytest.raises(CodecError, match="offset"):
+        unpack(frame[:-3])
+
+
+def test_unpack_unknown_tag_reports_offset():
+    with pytest.raises(CodecError, match="unknown tag"):
+        unpack(b"Z")
+
+
+def test_unpack_truncated_container_count():
+    # a dict header promising more entries than the buffer holds
+    frame = pack({"a": 1, "b": 2})
+    with pytest.raises(CodecError):
+        unpack(frame[: len(frame) - 5])
+
+
+def test_codec_error_is_both_rpc_error_and_value_error():
+    with pytest.raises(RpcError):
+        unpack(b"Z")
+    with pytest.raises(ValueError):
+        unpack(b"Z")
+
+
+def test_unpack_depth_guard_rejects_hostile_nesting():
+    # hand-craft a buffer of nested single-element lists deeper than the
+    # packer could ever produce: 64 list headers, then a None leaf
+    deep = b"L\x01\x00\x00\x00" * 64 + b"N"
+    with pytest.raises(CodecError, match="depth"):
+        unpack(deep)
+
+
+def test_pack_depth_guard_rejects_hostile_nesting():
+    obj = None
+    for _ in range(64):
+        obj = [obj]
+    with pytest.raises(CodecError, match="depth"):
+        pack(obj)
+
+
+def test_zero_copy_unpack_returns_views_over_the_buffer():
+    frame = pack({"blob": b"0123456789" * 100})
+    msg = unpack(frame, copy=False)
+    assert isinstance(msg["blob"], memoryview)
+    assert bytes(msg["blob"]) == b"0123456789" * 100
+    # the default stays plain bytes for callers that hold onto payloads
+    assert isinstance(unpack(frame)["blob"], bytes)
+
+
+# -- compaction + delta shipping ----------------------------------------------
+
+def test_compact_window_keeps_last_writer_per_path():
+    def upsert(path, seq, epoch, size):
+        return {"service": "meta", "op": "upsert", "seq": seq, "epoch": epoch,
+                "origin": 0, "entries": [{"path": path, "epoch": epoch, "size": size}]}
+
+    out = compact_window([
+        upsert("/a", 1, 1, 1), upsert("/a", 2, 2, 2), upsert("/b", 3, 3, 3),
+    ])
+    # superseded /a@1 dropped; adjacent survivors re-grouped into one record
+    assert len(out) == 1 and out[0]["op"] == "upsert"
+    entries = {e["path"]: e for e in out[0]["entries"]}
+    assert entries["/a"]["epoch"] == 2 and entries["/a"]["size"] == 2
+    assert entries["/b"]["epoch"] == 3
+
+
+def test_compacted_and_raw_shipping_converge_to_the_same_state():
+    tables = {}
+    for mode, compact, deltas in (("compacted", True, True), ("raw", False, False)):
+        collab = _replicated_collab(max_pending=1 << 30, max_age_s=1e9,
+                                    compact=compact, deltas=deltas)
+        ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+        arrays = {"x": np.zeros(2, np.float32)}
+        for rnd in range(5):
+            for i in range(6):
+                ws.write_scidata(f"/cw/f{i}.sci", arrays,
+                                 {"lvl": i, "round": rnd, "site": f"s{i % 2}"})
+        # deletions must survive compaction as tombstones
+        ws.delete("/cw/f5.sci")
+        assert collab.quiesce_replication(30.0)
+        per_dtn = _attr_tables(collab, include_mtime=False)
+        assert all(t == per_dtn[0] for t in per_dtn), f"{mode}: replicas diverged"
+        if compact:
+            assert sum(d.replica_pump.records_compacted for d in collab.dtns) > 0
+        tables[mode] = per_dtn[0]
+        ws.close()
+        collab.close()
+    # fs.mtime rows are wall-clock and differ across the two runs; everything
+    # else must be identical — the wire encoding is invisible to LWW state
+    assert tables["compacted"] == tables["raw"]
+
+
+def test_delta_shipping_fires_on_overwrite_and_converges():
+    collab = _replicated_collab(max_pending=1 << 30, max_age_s=1e9,
+                                compact=True, deltas=True)
+    ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+    arrays = {"x": np.zeros(2, np.float32)}
+
+    def attrs(i, rnd):
+        # mostly-static rows: the per-overwrite diff is smaller than the row
+        # set, so the second drain ships +/- deltas against the first
+        return {"lvl": i, "round": rnd, "site": f"s{i % 2}",
+                "proj": "scispace", "camp": f"c{i % 3}", "res_m": 250}
+
+    for i in range(6):
+        ws.write_scidata(f"/dl/f{i}.sci", arrays, attrs(i, 0))
+    assert collab.quiesce_replication(30.0)
+    for i in range(6):
+        ws.write_scidata(f"/dl/f{i}.sci", arrays, attrs(i, 1))
+    assert collab.quiesce_replication(30.0)
+
+    assert sum(d.replica_pump.delta_records for d in collab.dtns) > 0
+    assert sum(d.replica_pump.delta_refused for d in collab.dtns) == 0
+    per_dtn = _attr_tables(collab)
+    assert all(t == per_dtn[0] for t in per_dtn)
+    ws.close()
+    collab.close()
+
+
+def test_compacted_shipping_survives_dtn_crash_restart():
+    collab = _replicated_collab(max_pending=1 << 30, max_age_s=1e9,
+                                compact=True, deltas=True)
+    ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+    arrays = {"x": np.zeros(2, np.float32)}
+    for rnd in range(3):
+        for i in range(4):
+            ws.write_scidata(f"/cr/f{i}.sci", arrays, {"lvl": i, "round": rnd})
+    assert collab.quiesce_replication(30.0)
+
+    victim = 3
+    collab.crash_dtn(victim)
+    # overwrite only paths the victim does not own (owner writes fail loudly
+    # while it is down); the victim must still learn them after restart
+    survivors = [f"/cr/f{i}.sci" for i in range(4)
+                 if ws.plane.owner(f"/cr/f{i}.sci") != victim]
+    assert survivors
+    for p in survivors:
+        ws.write_scidata(p, arrays, {"lvl": 0, "round": 99})
+    # let the living peers drain while the victim is unreachable
+    for dtn in collab.dtns:
+        if not dtn.down:
+            dtn.replica_pump.drain()
+    collab.restart_dtn(victim)
+    assert collab.quiesce_replication(30.0)
+    per_dtn = _attr_tables(collab)
+    assert all(t == per_dtn[0] for t in per_dtn), "crashed replica did not catch up"
+    ws.close()
+    collab.close()
+
+
+def test_adaptive_batcher_resizes_toward_target_latency():
+    b = AdaptiveBatcher(256, lo=32, hi=4096, target_s=0.05)
+    assert b.window == 256
+    # slow drains (1 ms/record): window shrinks toward 50 records
+    for _ in range(20):
+        b.record(100, 100 * 1e-3)
+    assert 32 <= b.window <= 64
+    # fast drains (1 us/record): window grows to the cap
+    for _ in range(40):
+        b.record(1000, 1000 * 1e-6)
+    assert b.window == 4096
+    # degenerate observations are ignored
+    w = b.window
+    b.record(0, 1.0)
+    assert b.window == w
+    with pytest.raises(ValueError):
+        AdaptiveBatcher(16, lo=32, hi=8)
+
+
+def test_pump_accepts_wire_path_knobs():
+    collab = _replicated_collab(batch_limit=128, compact=True, deltas=True,
+                                adaptive_batch=True)
+    try:
+        for dtn in collab.dtns:
+            assert dtn.replica_pump.compact and dtn.replica_pump.deltas
+            assert dtn.replica_pump.batcher is not None
+            assert dtn.replica_pump.batcher.window == 128
+    finally:
+        collab.close()
+
+
+def test_testbed_config_carries_wire_path_knobs():
+    from repro.configs.scispace_testbed import TestbedConfig
+
+    cfg = TestbedConfig()
+    assert cfg.compact_window == COMPACT_WINDOW
+    assert cfg.summary_bits == SUMMARY_BITS
+    assert cfg.adaptive_batch is False
+    # and the knobs actually reach the cluster layer
+    c = Collaboration()
+    c.add_datacenter("dc0", n_dtns=1, summary_bits=cfg.summary_bits // 2)
+    try:
+        assert c.dtns[0].discovery.summary.nbits == cfg.summary_bits // 2
+        c.start_replication(batch_limit=cfg.compact_window,
+                            adaptive_batch=cfg.adaptive_batch)
+        assert c.dtns[0].replica_pump.batch_limit == cfg.compact_window
+    finally:
+        c.close()
+
+
+# -- shard pruning ------------------------------------------------------------
+
+def test_summary_pruning_is_one_sided():
+    s = ShardSummary(SUMMARY_BITS)
+    for term in summary_terms_for_row("site", "text", None, None, "s1"):
+        s.add(term)
+    plan = plan_query("site = s1")
+    hit = plan.prune({0: s}, 1)
+    assert 0 in hit.send and not hit.empty
+    plan_miss = plan_query("site = definitely-absent")
+    miss = plan_miss.prune({0: s}, 1)
+    assert miss.empty and miss.send == {} and miss.pruned_shards == 1
+
+
+def test_prune_with_no_summaries_degrades_to_full_fanout():
+    plan = plan_query("site = s1")
+    d = plan.prune({}, 4)
+    assert d.send == {i: [0] for i in range(4)}
+    assert d.contacted() == 4 and d.pruned_shards == 0 and not d.empty
+
+
+def test_prune_decision_counts():
+    s_hit = ShardSummary(SUMMARY_BITS)
+    for term in summary_terms_for_row("site", "text", None, None, "s1"):
+        s_hit.add(term)
+    s_miss = ShardSummary(SUMMARY_BITS)
+    d = plan_query("site = s1").prune({0: s_hit, 1: s_miss}, 3)
+    assert isinstance(d, PruneDecision)
+    assert set(d.send) == {0, 2}  # 1 pruned by proof, 2 unknown -> contacted
+    assert d.pruned_shards == 1 and d.pruned_pairs == 1
+
+
+def test_pruned_queries_return_identical_answers():
+    collab = _replicated_collab(n_dcs=2, dtns_per_dc=2,
+                                max_pending=32, max_age_s=0.01)
+    ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+    ws_ref = Workspace(collab, "bob", "dc1", extraction_mode="none",
+                       prune_queries=False)
+    arrays = {"x": np.zeros(2, np.float32)}
+    for i in range(24):
+        ws.write_scidata(f"/pq/f{i:03d}.sci", arrays,
+                         {"site": f"s{i % 6}", "lvl": i % 3})
+    assert collab.quiesce_replication(30.0)
+    queries = [f"site = s{k}" for k in range(6)] + ["site = s1 and lvl = 0"]
+    for q in queries:
+        assert ws.search_paths(q) == ws_ref.search_paths(q), q
+    assert ws.plane.shards_pruned > 0
+    # absent values short-circuit with zero scatter RPCs
+    calls0 = ws.rpc_stats()["calls"]
+    assert ws.search_paths("site = nowhere") == []
+    assert ws.plane.pruned_empty_queries >= 1
+    assert ws.rpc_stats()["calls"] - calls0 <= 1  # at most the summary warm
+    ws.close()
+    ws_ref.close()
+    collab.close()
+
+
+def test_pruning_disabled_without_replication():
+    # without a replicated summary plane every shard must be contacted —
+    # pruning silently turns itself off rather than guessing
+    collab = Collaboration()
+    collab.add_datacenter("dc0", n_dtns=2)
+    ws = Workspace(collab, "alice", "dc0", extraction_mode="inline-sync")
+    arrays = {"x": np.zeros(2, np.float32)}
+    ws.write_scidata("/np/a.sci", arrays, {"site": "s1"})
+    assert ws.search_paths("site = s1") == ["/np/a.sci"]
+    assert ws.search_paths("site = nowhere") == []
+    assert ws.plane.shards_pruned == 0
+    assert ws.plane.pruned_empty_queries == 0
+    ws.close()
+    collab.close()
