@@ -34,6 +34,12 @@ META_LAT = 5e-6
 CROSS_DC_LAT = 50e-6
 #: data-plane bandwidth (bytes/s) for cross-DC transfers (100 Gb/s link).
 CROSS_BW_GBPS = 100.0
+#: per-stream window-bound rate on the cross-DC link (Gb/s).  A single TCP
+#: flow over a long-RTT WAN is limited by its congestion/receive window far
+#: below link rate — the reason GridFTP/bbcp open parallel streams.  The
+#: data plane's ``data_lanes`` striping aggregates lanes back toward the
+#: link's CROSS_BW_GBPS.
+CROSS_STREAM_GBPS = 5.0
 #: per-DC PFS: Lustre-like per-op latency + bandwidth (paper: PFS below IB
 #: rate).  These make small-block I/O latency-bound on the *store*, so the
 #: FUSE/metadata overhead lands in the paper's 2–70% window, not 100×.
@@ -51,7 +57,12 @@ def make_collab(
     def channels(from_dc: str, to_dc: str) -> Channel:
         if from_dc == to_dc:
             return Channel(name="intra", latency_s=META_LAT)
-        return Channel(name="cross", latency_s=META_LAT + CROSS_DC_LAT, gbps=CROSS_BW_GBPS)
+        return Channel(
+            name="cross",
+            latency_s=META_LAT + CROSS_DC_LAT,
+            gbps=CROSS_BW_GBPS,
+            stream_gbps=CROSS_STREAM_GBPS,
+        )
 
     collab = Collaboration(channel_policy=channels)
     for i in range(n_dcs):

@@ -9,6 +9,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   fig9d  metadata plane: pipelined five-op writes + scatter-gather query
   fig10  replicated metadata tier: replica reads, convergence, journal replay
   fig11  wire-path acceleration: codec fast path, compacted shipping, pruning
+  fig12  data plane: striped multi-lane transfers, chunk cache, read-ahead
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -33,6 +34,7 @@ from benchmarks import (
     fig9d_plane,
     fig10_replication,
     fig11_wirepath,
+    fig12_datapath,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -66,6 +68,7 @@ def main(argv=None) -> int:
         ("fig9d_plane", fig9d_plane.main),
         ("fig10_replication", fig10_replication.main),
         ("fig11_wirepath", fig11_wirepath.main),
+        ("fig12_datapath", fig12_datapath.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

@@ -4,12 +4,14 @@
 #   scripts/bench.sh            # quick sweeps (CI-sized)
 #   FULL=1 scripts/bench.sh     # full sweeps (incl. 16/32-DTN planner scaling)
 #
-# Runs the fig9d metadata-plane benchmark, the fig10 replication-tier
-# benchmark, and the fig11 wire-path benchmark (codec fast path, compacted
-# shipping, shard pruning), writing results/fig{9d,10,11}*.json.  Exits
-# non-zero when a benchmark errors, a fig10/fig11 claim fails (their main()
-# raises), or the perf-regression gate trips: scripts/bench_gate.py compares
-# the key speedup/reduction ratios against the committed baseline
+# Runs the fig7 block-size sweep, the fig9d metadata-plane benchmark, the
+# fig10 replication-tier benchmark, the fig11 wire-path benchmark (codec fast
+# path, compacted shipping, shard pruning), and the fig12 data-plane benchmark
+# (striped multi-lane transfers, chunk cache, scidata read-ahead), writing
+# results/fig{7,9d,10,11,12}*.json.  Exits non-zero when a benchmark errors, a
+# fig7/fig10/fig11/fig12 claim fails (their main() raises), or the
+# perf-regression gate trips: scripts/bench_gate.py compares the key
+# speedup/reduction ratios against the committed baseline
 # (scripts/bench_baseline.json) with a tolerance band.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -21,18 +23,28 @@ if [ -n "${FULL:-}" ]; then
 fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" - <<EOF
-from benchmarks import fig9d_plane, fig10_replication, fig11_wirepath
+from benchmarks import (
+    fig7_blocksize,
+    fig9d_plane,
+    fig10_replication,
+    fig11_wirepath,
+    fig12_datapath,
+)
 
+fig7_blocksize.main(quick=$QUICK)  # raises if LW stops beating the baseline
+print()
 fig9d = fig9d_plane.main(quick=$QUICK)
 assert fig9d["write_speedup_pipelined"] >= 2.0, fig9d["write_speedup_pipelined"]
 print()
 fig10_replication.main(quick=$QUICK)  # raises if any claim fails
 print()
 fig11_wirepath.main(quick=$QUICK)  # raises if any claim fails
+print()
+fig12_datapath.main(quick=$QUICK)  # raises if a data-plane claim fails
 EOF
 
 echo
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/bench_gate.py
 
 echo
-echo "bench: OK (results/fig9d_plane.json, results/fig10_replication.json, results/fig11_wirepath.json)"
+echo "bench: OK (results/fig{7_blocksize,9d_plane,10_replication,11_wirepath,12_datapath}.json)"

@@ -5,10 +5,12 @@
     python scripts/bench_gate.py --record   # rewrite the baseline from results/
 
 The baseline (scripts/bench_baseline.json) pins machine-independent *ratios*
-— pipelined-write speedup, replica-read speedup, codec pack speedup, shipped-
-bytes reduction, pruned-shard fraction — with a tolerance band, so a refactor
-that silently costs 2x on the wire path fails CI while ordinary host noise
-does not.  Run the benchmarks first (scripts/bench.sh does both in order).
+— block-size sweep gains, pipelined-write speedup, replica-read speedup,
+codec pack speedup, shipped-bytes reduction, pruned-shard fraction, striped
+transfer / chunk-cache / read-ahead speedups — with a tolerance band, so a
+refactor that silently costs 2x on the wire or data path fails CI while
+ordinary host noise does not.  Run the benchmarks first (scripts/bench.sh
+does both in order).
 """
 
 from __future__ import annotations

@@ -16,7 +16,8 @@ PYTHON="${PYTHON:-python}"
 
 # Baseline ratchet: PR 2 went fully green (seed v0 was 103/9/2), so any
 # failure — including re-breaking the 9 ported jax tests — is a regression.
-BASE_PASS=197
+# PR 4 (data plane) added the datapath/backend suites: 197 -> 254.
+BASE_PASS=254
 BASE_FAIL=0
 BASE_ERR=0
 

@@ -11,6 +11,11 @@ simulated channels (DESIGN.md §2, §8).
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from repro.core.datapath import (
+    CHUNK_CACHE_BYTES,
+    DATA_LANES,
+    STRIPE_BYTES,
+)
 from repro.core.query import SUMMARY_BITS
 from repro.core.replication import (
     COMPACT_WINDOW,
@@ -62,6 +67,20 @@ class TestbedConfig:
     compact_window: int = COMPACT_WINDOW
     summary_bits: int = SUMMARY_BITS
     adaptive_batch: bool = False
+    # data-plane knobs (all honored by Workspace(stripe_bytes=..., ...)):
+    # - stripe_bytes: cross-DC transfers are chopped into chunks of this
+    #   size and dealt round-robin over the lane pool (0 = single-shot)
+    # - data_lanes: concurrent lanes per DC link; lanes share the link's
+    #   aggregate gbps but each carries its own window-bound stream and
+    #   overlaps latency + PFS store time (GridFTP-style parallel streams)
+    # - chunk_cache_bytes: client-side LRU chunk cache for remote-DC reads,
+    #   kept consistent via the path-hash InvalidationBus + epoch fences
+    #   (0 disables caching)
+    # - readahead: asynchronous scidata payload prefetch in directory order
+    stripe_bytes: int = STRIPE_BYTES
+    data_lanes: int = DATA_LANES
+    chunk_cache_bytes: int = CHUNK_CACHE_BYTES
+    readahead: bool = True
 
 
 TESTBED = TestbedConfig()

@@ -16,6 +16,10 @@ Layers (bottom-up):
   per-DTN clients, batched/pipelined RPC, bounded scatter-gather fan-out,
   and a write-back attribute cache with path-hash invalidation.  Every
   client (workspace, MEU, benchmarks) talks to services through it.
+- :mod:`repro.core.datapath`   — the **data plane**: striped multi-lane
+  cross-DC transfers (pipelined store/wire overlap), a consistent
+  client-side chunk cache riding the invalidation bus, and asynchronous
+  scidata read-ahead.
 - :mod:`repro.core.workspace`  — the scifs client (unified namespace) + native access
 - :mod:`repro.core.meu`        — Metadata Export Utility (local-write export protocol)
 - :mod:`repro.core.replication` — the **replicated metadata tier**: per-DTN
@@ -24,8 +28,9 @@ Layers (bottom-up):
   and the crash-recoverable write-back journal.
 """
 
-from .backends import MemoryBackend, PosixBackend, StorageBackend, SYNC_XATTR
+from .backends import MemoryBackend, OWNER_XATTR, PosixBackend, StorageBackend, SYNC_XATTR
 from .cluster import Collaboration, DataCenter, DTN
+from .datapath import ChunkCache, DataPath
 from .discovery import AsyncIndexer, DiscoveryService, ExtractionMode
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement, path_hash
 from .meu import MEU, ExportReport
@@ -54,9 +59,12 @@ __all__ = [
     "PosixBackend",
     "StorageBackend",
     "SYNC_XATTR",
+    "OWNER_XATTR",
     "Collaboration",
     "DataCenter",
     "DTN",
+    "ChunkCache",
+    "DataPath",
     "AsyncIndexer",
     "DiscoveryService",
     "ExtractionMode",

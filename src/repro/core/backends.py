@@ -31,7 +31,7 @@ import shutil
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 __all__ = [
     "StatResult",
@@ -39,10 +39,15 @@ __all__ = [
     "PosixBackend",
     "MemoryBackend",
     "SYNC_XATTR",
+    "OWNER_XATTR",
 ]
 
 #: Name of the extended attribute holding the export flag (§III-B1).
 SYNC_XATTR = "user.scispace.sync"
+#: Extended attribute persisting a file's owner on backends whose host
+#: filesystem has no collaborator identity (PosixBackend) — without it MEU
+#: exports over a Posix root would lose ownership.
+OWNER_XATTR = "user.scispace.owner"
 
 
 @dataclass
@@ -90,10 +95,32 @@ class StorageBackend:
 
     # -- data plane ---------------------------------------------------------
     def write(self, path: str, data: bytes, *, offset: int = 0, owner: str = "") -> int:
+        """Store ``data`` at ``offset``.  An ``offset=0`` write is a *full
+        rewrite* (POSIX ``O_TRUNC`` semantics): any previous tail beyond
+        ``len(data)`` is truncated, never left behind."""
         raise NotImplementedError
 
     def read(self, path: str, *, offset: int = 0, length: int = -1) -> bytes:
         raise NotImplementedError
+
+    # -- deferred variants (data-plane pipelining) ---------------------------
+    # The simulated PFS delay (store_delay_for) is normally slept inside
+    # read/write.  The striped data path overlaps store fetches with wire
+    # time, so it needs the payload *now* and the modeled delay *returned*
+    # instead of slept — mirroring RpcClient.call_deferred.  Backends with
+    # real I/O (PosixBackend) pay real time and return 0.
+    def store_delay_for(self, nbytes: int) -> float:
+        """Modeled PFS delay for an ``nbytes`` transfer (0 for real I/O)."""
+        return 0.0
+
+    def read_deferred(self, path: str, *, offset: int = 0, length: int = -1) -> "Tuple[bytes, float]":
+        data = self.read(path, offset=offset, length=length)
+        return data, 0.0
+
+    def write_deferred(
+        self, path: str, data: bytes, *, offset: int = 0, owner: str = ""
+    ) -> "Tuple[int, float]":
+        return self.write(path, data, offset=offset, owner=owner), 0.0
 
     def create(self, path: str, *, owner: str = "") -> None:
         """Create an empty file (the paper's zero-size-file MEU workload)."""
@@ -139,6 +166,15 @@ class StorageBackend:
         with self._xattr_lock:
             self._xattrs.get(_norm(path), {}).pop(name, None)
 
+    def drop_xattrs_under(self, path: str) -> None:
+        """Forget all xattrs on ``path`` and its subtree (after a delete), so
+        a later re-creation cannot inherit a stale owner or sync flag."""
+        path = _norm(path)
+        prefix = path + "/"
+        with self._xattr_lock:
+            for p in [p for p in self._xattrs if p == path or p.startswith(prefix)]:
+                del self._xattrs[p]
+
     def invalidate_sync_up(self, path: str) -> None:
         """Clear the sync flag on all ancestors of ``path`` (export protocol).
 
@@ -177,10 +213,14 @@ class MemoryBackend(StorageBackend):
         self._meta: Dict[str, Dict] = {"/": {"ctime": time.time(), "mtime": time.time(), "owner": ""}}
         self._bytes_written = 0
 
-    def _store_delay(self, nbytes: int) -> None:
+    def store_delay_for(self, nbytes: int) -> float:
         delay = self.store_lat_s if nbytes > 0 else 0.0
         if self.store_gbps > 0 and nbytes > 0:
             delay += nbytes * 8 / (self.store_gbps * 1e9)
+        return delay
+
+    def _store_delay(self, nbytes: int) -> None:
+        delay = self.store_delay_for(nbytes)
         if delay > 0:
             time.sleep(delay)
 
@@ -202,6 +242,14 @@ class MemoryBackend(StorageBackend):
         self._meta[path] = {"ctime": now, "mtime": now, "owner": ""}
 
     def write(self, path: str, data: bytes, *, offset: int = 0, owner: str = "") -> int:
+        n, delay = self.write_deferred(path, data, offset=offset, owner=owner)
+        if delay > 0:
+            time.sleep(delay)
+        return n
+
+    def write_deferred(
+        self, path: str, data: bytes, *, offset: int = 0, owner: str = ""
+    ) -> Tuple[int, float]:
         path = _norm(path)
         with self._lock:
             self._require_parent(path)
@@ -214,21 +262,28 @@ class MemoryBackend(StorageBackend):
             if offset > len(buf):
                 buf.extend(b"\x00" * (offset - len(buf)))
             buf[offset : offset + len(data)] = data
+            if offset == 0:
+                # full rewrite: drop any stale tail (O_TRUNC semantics)
+                del buf[len(data):]
             self._meta[path]["mtime"] = now
             self._bytes_written += len(data)
-        self._store_delay(len(data))
         self.invalidate_sync_up(path)
-        return len(data)
+        return len(data), self.store_delay_for(len(data))
 
     def read(self, path: str, *, offset: int = 0, length: int = -1) -> bytes:
+        out, delay = self.read_deferred(path, offset=offset, length=length)
+        if delay > 0:
+            time.sleep(delay)
+        return out
+
+    def read_deferred(self, path: str, *, offset: int = 0, length: int = -1) -> Tuple[bytes, float]:
         path = _norm(path)
         with self._lock:
             buf = self._files.get(path)
             if buf is None or not isinstance(buf, bytearray):
                 raise FileNotFoundError(path)
             out = bytes(buf[offset:]) if length < 0 else bytes(buf[offset : offset + length])
-        self._store_delay(len(out))
-        return out
+        return out, self.store_delay_for(len(out))
 
     def mkdir(self, path: str, *, owner: str = "", exist_ok: bool = True) -> None:
         path = _norm(path)
@@ -252,6 +307,7 @@ class MemoryBackend(StorageBackend):
             for p in doomed:
                 self._files.pop(p, None)
                 self._meta.pop(p, None)
+        self.drop_xattrs_under(path)
         self.invalidate_sync_up(path)
 
     def exists(self, path: str) -> bool:
@@ -321,6 +377,15 @@ class PosixBackend(StorageBackend):
         with open(host, mode) as fh:
             fh.seek(offset)
             fh.write(data)
+            if offset == 0:
+                # full rewrite: an existing longer file must not keep its old
+                # tail past the new data (O_TRUNC semantics)
+                fh.truncate()
+        if owner and self.get_xattr(path, OWNER_XATTR) is None:
+            # first writer owns the file (mirrors MemoryBackend, which pins
+            # owner at creation); persisted via the xattr table so MEU
+            # exports over a Posix root keep ownership
+            self.set_xattr(path, OWNER_XATTR, owner)
         with self._count_lock:
             self._bytes_written += len(data)
         self.invalidate_sync_up(path)
@@ -336,6 +401,8 @@ class PosixBackend(StorageBackend):
 
     def mkdir(self, path: str, *, owner: str = "", exist_ok: bool = True) -> None:
         os.makedirs(self._host(path), exist_ok=exist_ok)
+        if owner and self.get_xattr(path, OWNER_XATTR) is None:
+            self.set_xattr(path, OWNER_XATTR, owner)
         self.invalidate_sync_up(path)
 
     def delete(self, path: str) -> None:
@@ -346,6 +413,7 @@ class PosixBackend(StorageBackend):
             os.remove(host)
         else:
             raise FileNotFoundError(path)
+        self.drop_xattrs_under(path)
         self.invalidate_sync_up(path)
 
     def exists(self, path: str) -> bool:
@@ -362,6 +430,7 @@ class PosixBackend(StorageBackend):
             is_dir=os.path.isdir(host),
             ctime=st.st_ctime,
             mtime=st.st_mtime,
+            owner=self.get_xattr(path, OWNER_XATTR) or "",
         )
 
     def listdir(self, path: str) -> List[str]:

@@ -138,6 +138,11 @@ class DataCenter:
     def local_dtns(self) -> List[DTN]:
         return self.dtns
 
+    def has_live_dtn(self) -> bool:
+        """True while at least one DTN can move this DC's PFS bytes over the
+        WAN — the data plane's liveness bar for striped transfers."""
+        return any(not dtn.down for dtn in self.dtns)
+
     def offline_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
         """LW-Offline extraction: run SDS directly on this DC's DTNs (§III-B5).
 

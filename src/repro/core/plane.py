@@ -59,32 +59,43 @@ class InvalidationBus:
     """Collaboration-wide pub/sub of metadata invalidations, keyed by path hash.
 
     Every mutating client publishes the path hashes it touched; every other
-    subscribed cache drops matching entries.  The publisher's own cache is
-    excluded (``origin``) because it already holds the fresh entry — that is
-    what makes the cache write-back rather than read-only.
+    subscribed cache drops matching entries.  The publisher's own caches are
+    excluded (``origin`` — one cache or a collection, since a mount owns both
+    an attribute cache and a data chunk cache) because they already hold the
+    fresh state — that is what makes them write-back rather than read-only.
+
+    Subscribers are duck-typed: anything with ``invalidate_hashes(hashes)``
+    (:class:`AttrCache`, :class:`~repro.core.datapath.ChunkCache`) rides the
+    same fabric, so one publication keeps metadata *and* data reads fresh.
     """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._caches: List["AttrCache"] = []
+        self._caches: List[Any] = []
         self.published = 0
 
-    def subscribe(self, cache: "AttrCache") -> None:
+    def subscribe(self, cache: Any) -> None:
         with self._lock:
             if cache not in self._caches:
                 self._caches.append(cache)
 
-    def unsubscribe(self, cache: "AttrCache") -> None:
+    def unsubscribe(self, cache: Any) -> None:
         with self._lock:
             if cache in self._caches:
                 self._caches.remove(cache)
 
-    def publish(self, hashes: Iterable[str], origin: Optional["AttrCache"] = None) -> None:
+    def publish(self, hashes: Iterable[str], origin: Any = None) -> None:
         hashes = list(hashes)
         if not hashes:
             return
+        if origin is None:
+            excluded: Tuple[Any, ...] = ()
+        elif isinstance(origin, (list, tuple, set, frozenset)):
+            excluded = tuple(origin)
+        else:
+            excluded = (origin,)
         with self._lock:
-            targets = [c for c in self._caches if c is not origin]
+            targets = [c for c in self._caches if not any(c is o for o in excluded)]
             self.published += len(hashes)
         for cache in targets:
             cache.invalidate_hashes(hashes)
@@ -267,6 +278,10 @@ class ServicePlane:
         self.shard_contacts = 0
         self.shards_pruned = 0
         self.pruned_empty_queries = 0
+        #: sibling caches owned by the same mount (e.g. the data plane's
+        #: chunk cache): excluded from our own publications alongside the
+        #: attr cache, because the mount updates them in place on its writes
+        self._co_caches: List[Any] = []
         self._bus: Optional[InvalidationBus] = getattr(collab, "invalidations", None)
         # write-only clients (MEU) publish invalidations but never read
         # through their cache, so they skip the subscription — otherwise every
@@ -531,9 +546,17 @@ class ServicePlane:
         self.cache.pop(path)
         self.publish([path])
 
+    def attach_cache(self, cache: Any) -> None:
+        """Register a sibling cache of this mount (chunk cache) so our own
+        publications do not evict its freshly written-through entries."""
+        if cache is not None and not any(c is cache for c in self._co_caches):
+            self._co_caches.append(cache)
+
     def publish(self, paths: Iterable[str]) -> None:
         if self._bus is not None:
-            self._bus.publish([path_hash(p) for p in paths], origin=self.cache)
+            self._bus.publish(
+                [path_hash(p) for p in paths], origin=(self.cache, *self._co_caches)
+            )
 
     # -- write-back ------------------------------------------------------------
     def defer_update(self, path: str, **update_kwargs: Any) -> None:

@@ -438,25 +438,65 @@ class Channel:
     """A (simulated) network link with latency and bandwidth.
 
     ``latency_s`` is the one-way per-message latency; ``gbps`` the link
-    bandwidth in gigabits/s.  Zero latency + infinite bandwidth (the default)
-    makes transmission free while the serialization cost stays real.
+    *capacity* in gigabits/s.  Zero latency + infinite bandwidth (the
+    default) makes transmission free while the serialization cost stays real.
+
+    ``stream_gbps`` models the per-stream achievable rate: one flow over a
+    long-RTT WAN link is window-bound far below link capacity (the reason
+    GridFTP/bbcp move data over parallel streams), so a single transfer runs
+    at ``min(gbps, stream_gbps)`` while the link itself can carry more.  The
+    data plane exploits the gap with :meth:`split` — N *lanes* that share the
+    link capacity (``gbps / n`` each, still window-bound per lane) but
+    overlap their ``latency_s``, so striped transfers aggregate up to
+    ``min(gbps, n * stream_gbps)`` instead of teleporting bytes.
     """
 
     name: str = "local"
     latency_s: float = 0.0
     gbps: float = float("inf")
+    stream_gbps: float = float("inf")
+
+    def rate_gbps(self) -> float:
+        """Effective per-stream rate: capacity capped by the stream window."""
+        return min(self.gbps, self.stream_gbps)
+
+    def payload_seconds(self, payload_len: int) -> float:
+        """Serialization time of a payload at the per-stream rate (no latency)."""
+        rate = self.rate_gbps()
+        if rate != float("inf") and rate > 0:
+            return (payload_len * 8) / (rate * 1e9)
+        return 0.0
 
     def delay_for(self, payload_len: int) -> float:
         """The modeled one-way delay for a payload, without sleeping."""
-        delay = self.latency_s
-        if self.gbps != float("inf") and self.gbps > 0:
-            delay += (payload_len * 8) / (self.gbps * 1e9)
-        return delay
+        return self.latency_s + self.payload_seconds(payload_len)
 
     def transmit(self, payload_len: int) -> None:
         delay = self.delay_for(payload_len)
         if delay > 0:
             time.sleep(delay)
+
+    def split(self, n: int) -> List["Channel"]:
+        """The lane model: ``n`` concurrent lanes over this link.
+
+        Lanes *share* the link capacity (``gbps / n`` each — striping never
+        creates bandwidth) but each lane keeps the full ``latency_s`` and its
+        own ``stream_gbps`` window, so per-lane latencies and window-bound
+        stream rates overlap instead of serializing.  The data plane
+        round-robins stripe chunks over the lanes and pays the makespan of
+        the slowest lane (:mod:`repro.core.datapath`).
+        """
+        n = max(1, int(n))
+        gbps_each = self.gbps / n if self.gbps != float("inf") else float("inf")
+        return [
+            Channel(
+                name=f"{self.name}/lane{i}",
+                latency_s=self.latency_s,
+                gbps=gbps_each,
+                stream_gbps=self.stream_gbps,
+            )
+            for i in range(n)
+        ]
 
 
 #: A free channel for purely in-process wiring.

@@ -25,7 +25,7 @@ from __future__ import annotations
 import json
 import struct
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -38,8 +38,16 @@ __all__ = [
     "write_scidata",
     "read_header",
     "read_dataset",
+    "read_header_via",
+    "read_dataset_via",
+    "dataset_range",
     "attr_type_of",
 ]
+
+#: A ranged reader: ``(offset, length) -> bytes``.  Lets the parse logic run
+#: over any byte source — a local backend, or the data plane's chunk-cached
+#: cross-DC ranged reads (``DataPath.read_range``).
+RangeReader = Callable[[int, int], bytes]
 
 MAGIC = b"SCI1"
 
@@ -115,23 +123,52 @@ def write_scidata(
     return len(blob)
 
 
-def read_header(backend: StorageBackend, path: str) -> SciFile:
-    """Header-only read (the cheap metadata-extraction path)."""
-    prefix = backend.read(path, offset=0, length=8)
+def read_header_via(read_range: RangeReader, label: str = "<scidata>") -> SciFile:
+    """Header-only parse over any ranged byte source (see :data:`RangeReader`)."""
+    prefix = read_range(0, 8)
     if len(prefix) < 8 or prefix[:4] != MAGIC:
-        raise ValueError(f"{path}: not a scidata container")
+        raise ValueError(f"{label}: not a scidata container")
     (header_len,) = struct.unpack("<I", prefix[4:8])
-    header = backend.read(path, offset=8, length=header_len)
+    header = read_range(8, header_len)
     doc = json.loads(header.decode("utf-8"))
     return SciFile(attrs=doc["attrs"], datasets=doc["datasets"], header_len=header_len)
 
 
-def read_dataset(backend: StorageBackend, path: str, name: str) -> np.ndarray:
-    """Read one named array without touching the others."""
-    sci = read_header(backend, path)
+def dataset_range(sci: SciFile, entry: Dict) -> Tuple[int, int]:
+    """Absolute ``(offset, nbytes)`` of a dataset's payload within the file —
+    the range a read-ahead of the *next* dataset prefetches."""
+    return 8 + sci.header_len + entry["offset"], entry["nbytes"]
+
+
+def read_dataset_via(
+    read_range: RangeReader,
+    name: str,
+    label: str = "<scidata>",
+    *,
+    sci: Optional[SciFile] = None,
+) -> np.ndarray:
+    """Read one named array over any ranged byte source.
+
+    Pass a pre-parsed ``sci`` header to skip re-reading it (the data plane
+    does: the header was already fetched — and cached — moments earlier).
+    """
+    if sci is None:
+        sci = read_header_via(read_range, label)
     entry = sci.dataset(name)
     if entry is None:
-        raise KeyError(f"{path}: no dataset {name!r}")
-    base = 8 + sci.header_len
-    raw = backend.read(path, offset=base + entry["offset"], length=entry["nbytes"])
+        raise KeyError(f"{label}: no dataset {name!r}")
+    offset, nbytes = dataset_range(sci, entry)
+    raw = read_range(offset, nbytes)
     return np.frombuffer(raw, dtype=np.dtype(entry["dtype"])).reshape(entry["shape"])
+
+
+def read_header(backend: StorageBackend, path: str) -> SciFile:
+    """Header-only read (the cheap metadata-extraction path)."""
+    return read_header_via(lambda off, ln: backend.read(path, offset=off, length=ln), path)
+
+
+def read_dataset(backend: StorageBackend, path: str, name: str) -> np.ndarray:
+    """Read one named array without touching the others."""
+    return read_dataset_via(
+        lambda off, ln: backend.read(path, offset=off, length=ln), name, path
+    )

@@ -28,7 +28,16 @@ mkdir) over every data center in the collaboration:
   down to every discovery shard in one batched RPC per shard and the file
   sets are merged centrally (§III-B5);
 - **SDS coupling**: scidata writes trigger attribute extraction according to
-  the configured :class:`~repro.core.discovery.ExtractionMode`.
+  the configured :class:`~repro.core.discovery.ExtractionMode`;
+- **data plane**: every cross-DC byte rides the mount's
+  :class:`~repro.core.datapath.DataPath` — striped over ``data_lanes``
+  concurrent lanes in ``stripe_bytes`` chunks (store latency pipelined
+  against wire time), served from a ``chunk_cache_bytes`` LRU chunk cache
+  kept consistent by the collaboration's path-hash invalidation bus, and
+  warmed by scidata ``readahead`` (after a header read the next dataset's
+  payload is prefetched in directory order).  Home-DC accesses bypass all of
+  it — a local read is a plain PFS access, preserving the paper's
+  native-vs-workspace framing.
 
 Native access (SCISPACE-LW) is the *absence* of this client: collaborators
 write straight into their local DC's backend via :class:`NativeSession` and
@@ -43,13 +52,15 @@ import numpy as np
 
 from .backends import StorageBackend, SYNC_XATTR
 from .cluster import Collaboration, DataCenter, DTN
+from .datapath import CHUNK_CACHE_BYTES, DATA_LANES, DataPath, STRIPE_BYTES
 from .discovery import ExtractionMode
 from .plane import ServicePlane
 from .query import plan_query
-from .rpc import Channel
 from .scidata import (
-    read_dataset,
-    read_header,
+    SciFile,
+    dataset_range,
+    read_dataset_via,
+    read_header_via,
     serialize_scidata,
     write_scidata as _write_scidata_backend,
 )
@@ -85,7 +96,16 @@ class Workspace:
         prefer_replica: bool = False,
         prune_queries: bool = True,
         summary_ttl_s: Optional[float] = None,
+        stripe_bytes: int = STRIPE_BYTES,
+        data_lanes: int = DATA_LANES,
+        chunk_cache_bytes: int = CHUNK_CACHE_BYTES,
+        readahead: bool = True,
     ):
+        """``stripe_bytes`` / ``data_lanes`` shape the striped multi-lane
+        transfer (0 / 1 restore the single-shot path); ``chunk_cache_bytes``
+        sizes the consistent remote-read chunk cache (0 disables it);
+        ``readahead`` toggles asynchronous scidata payload prefetch.  All
+        four ride :class:`~repro.configs.scispace_testbed.TestbedConfig`."""
         if extraction_mode not in ExtractionMode.ALL:
             raise ValueError(f"unknown extraction mode {extraction_mode!r}")
         self.collab = collab
@@ -115,9 +135,19 @@ class Workspace:
         if summary_ttl_s is not None:
             plane_kwargs["summary_ttl_s"] = summary_ttl_s
         self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
-        self._data_channels: Dict[str, Channel] = {
-            dc_id: collab.channel_policy(home_dc, dc_id) for dc_id in collab.datacenters
-        }
+        # The data plane: every cross-DC byte moves through it (striped
+        # lanes + chunk cache + read-ahead); home-DC bytes stay direct.
+        self.datapath = DataPath(
+            collab,
+            home_dc,
+            stripe_bytes=stripe_bytes,
+            data_lanes=data_lanes,
+            chunk_cache_bytes=chunk_cache_bytes,
+            readahead=readahead,
+        )
+        # our own metadata publications must not evict our own freshly
+        # written-through chunks
+        self.plane.attach_cache(self.datapath.cache)
 
     # -- internals ---------------------------------------------------------------
     def _owner(self, path: str) -> int:
@@ -126,13 +156,14 @@ class Workspace:
     def _dtn(self, path: str) -> DTN:
         return self.collab.dtns[self._owner(path)]
 
-    def _data_io(self, dc_id: str, nbytes: int) -> None:
-        """Cross the data-plane link for a remote-DC read/write."""
-        if dc_id != self.home_dc:
-            self._data_channels[dc_id].transmit(nbytes)
-
     def _ns_id(self, path: str) -> int:
         return self.collab.namespaces.resolve(path).ns_id
+
+    @staticmethod
+    def _entry_epoch(entry: Optional[Dict[str, Any]]) -> int:
+        """The freshness fence a data read carries into the chunk cache: bytes
+        cached under an older epoch than the metadata row cannot be served."""
+        return int(entry.get("epoch", 0) or 0) if entry else 0
 
     # -- POSIX-like surface ---------------------------------------------------
     def write(self, path: str, data: bytes) -> int:
@@ -170,8 +201,17 @@ class Workspace:
                 self.plane.meta_call(                                    # 5
                     owner_idx, "update", path=path, size=len(data), sync=True
                 )
-        self._data_io(dtn.dc_id, len(data))             # 4 write (data plane)
-        dtn.backend.write(path, data, owner=self.collaborator)
+        if dtn.dc_id == self.home_dc:                   # 4 write (local PFS)
+            dtn.backend.write(path, data, owner=self.collaborator)
+        else:                                           # 4 write (data plane:
+            # striped over the lane pool, written through into the cache)
+            self.datapath.write(
+                dtn.dc_id,
+                path,
+                data,
+                owner=self.collaborator,
+                epoch=self._entry_epoch(entry),
+            )
         entry["size"] = len(data)
         self.plane.note_entry(entry)
         if self.write_back:
@@ -202,14 +242,17 @@ class Workspace:
         return self.plane.flush()
 
     def read(self, path: str) -> bytes:
+        """Whole-file read: home-DC files straight off the PFS, remote files
+        through the data plane (striped lanes, chunk-cache hits at
+        home-DC cost, byte-identical either way)."""
         path = _norm(path)
         entry = self.plane.stat(path)
         if entry is None:
             raise FileNotFoundError(path)
-        dc = self.collab.dc(entry["dc_id"])
-        data = dc.backend.read(path)
-        self._data_io(entry["dc_id"], len(data))
-        return data
+        dc_id = entry["dc_id"]
+        if dc_id == self.home_dc:
+            return self.collab.dc(dc_id).backend.read(path)
+        return self.datapath.read(dc_id, path, epoch=self._entry_epoch(entry))
 
     def stat(self, path: str) -> Optional[Dict[str, Any]]:
         """Attribute lookup; a plane-cache hit costs zero RPCs."""
@@ -311,6 +354,9 @@ class Workspace:
             raise PermissionError(f"{self.collaborator} does not own {path}")
         self.plane.meta_call(self._owner(path), "delete", path=path)
         self.plane.note_remove(path)
+        # our own chunk cache is excluded from our publications — drop the
+        # dead bytes explicitly (other mounts learn via the bus)
+        self.datapath.invalidate(path)
         dc = self.collab.dc(entry["dc_id"])
         if dc.backend.exists(path):
             dc.backend.delete(path)
@@ -320,22 +366,62 @@ class Workspace:
         """Write a self-describing dataset through the workspace."""
         return self.write(path, serialize_scidata(arrays, attrs))
 
+    def _range_reader(self, entry: Dict[str, Any], path: str):
+        """A ``(offset, length) -> bytes`` reader for scidata parsing: the
+        local PFS for home-DC files, the data plane for remote ones — so
+        remote header bytes are charged on the data channel (and the chunk
+        cache makes repeated header reads legitimately free)."""
+        dc_id = entry["dc_id"]
+        if dc_id == self.home_dc:
+            backend = self.collab.dc(dc_id).backend
+            return lambda off, ln: backend.read(path, offset=off, length=ln)
+        epoch = self._entry_epoch(entry)
+        return lambda off, ln: self.datapath.read_range(dc_id, path, off, ln, epoch=epoch)
+
+    def _readahead(self, entry: Dict[str, Any], path: str, sci: SciFile, after: Optional[str]) -> None:
+        """Directory-ordered scidata read-ahead: after a header read prefetch
+        the first dataset's payload; after reading dataset *i* prefetch
+        dataset *i+1* — the access pattern of a collaborator walking a
+        container.  Best-effort and remote-only (local reads are cheap)."""
+        if entry["dc_id"] == self.home_dc or not sci.datasets:
+            return
+        if after is None:
+            targets = sci.datasets[:1]
+        else:
+            idx = next(
+                (i for i, d in enumerate(sci.datasets) if d["name"] == after), None
+            )
+            if idx is None or idx + 1 >= len(sci.datasets):
+                return
+            targets = [sci.datasets[idx + 1]]
+        ranges = []
+        for d in targets:
+            off, nbytes = dataset_range(sci, d)
+            if nbytes > 0:
+                ranges.append((off, off + nbytes))
+        if ranges:
+            self.datapath.prefetch(
+                entry["dc_id"], path, ranges, epoch=self._entry_epoch(entry)
+            )
+
     def read_attrs(self, path: str) -> Dict[str, Any]:
         path = _norm(path)
         entry = self.stat(path)
         if entry is None:
             raise FileNotFoundError(path)
-        dc = self.collab.dc(entry["dc_id"])
-        return read_header(dc.backend, path).attrs
+        sci = read_header_via(self._range_reader(entry, path), path)
+        self._readahead(entry, path, sci, after=None)
+        return sci.attrs
 
     def read_dataset(self, path: str, name: str) -> np.ndarray:
         path = _norm(path)
         entry = self.stat(path)
         if entry is None:
             raise FileNotFoundError(path)
-        dc = self.collab.dc(entry["dc_id"])
-        arr = read_dataset(dc.backend, path, name)
-        self._data_io(entry["dc_id"], arr.nbytes)
+        reader = self._range_reader(entry, path)
+        sci = read_header_via(reader, path)
+        arr = read_dataset_via(reader, name, path, sci=sci)
+        self._readahead(entry, path, sci, after=name)
         return arr
 
     def tag(self, path: str, name: str, value: Any) -> None:
@@ -461,13 +547,21 @@ class Workspace:
     def cache_stats(self) -> Dict[str, int]:
         return self.plane.cache.stats()
 
+    def data_stats(self) -> Dict[str, Any]:
+        """Data-plane accounting: transfers, bytes, wire time, chunk-cache
+        hit/miss/invalidation counters, prefetch activity."""
+        return self.datapath.stats()
+
     def close(self) -> None:
+        self.datapath.close()
         self.plane.close()
 
     def crash(self) -> None:
         """Simulate this mount dying mid-session (nothing flushed); a new
         Workspace with the same ``journal_path`` recovers the acknowledged
-        write-back updates and commits them on its next flush."""
+        write-back updates and commits them on its next flush.  The chunk
+        cache dies with the client — it is volatile client state."""
+        self.datapath.close()
         self.plane.crash()
 
 
@@ -485,7 +579,17 @@ class NativeSession:
         self.collaborator = collaborator
 
     def write(self, path: str, data: bytes) -> int:
-        return self.backend.write(_norm(path), data, owner=self.collaborator)
+        path = _norm(path)
+        n = self.backend.write(path, data, owner=self.collaborator)
+        self._desync(path)
+        return n
+
+    def _desync(self, path: str) -> None:
+        """A native (over)write de-synchronizes the file: if it was exported
+        before, its metadata is stale until the next MEU export — which also
+        re-publishes the invalidation that evicts remote chunk caches."""
+        if self.backend.get_xattr(path, SYNC_XATTR) == "true":
+            self.backend.set_xattr(path, SYNC_XATTR, "false")
 
     def create(self, path: str) -> None:
         self.backend.create(_norm(path), owner=self.collaborator)
@@ -497,9 +601,12 @@ class NativeSession:
         self.backend.mkdir(_norm(path), owner=self.collaborator)
 
     def write_scidata(self, path: str, arrays: Dict[str, np.ndarray], attrs: Dict[str, Any]) -> int:
-        return _write_scidata_backend(
-            self.backend, _norm(path), arrays, attrs, owner=self.collaborator
+        path = _norm(path)
+        n = _write_scidata_backend(
+            self.backend, path, arrays, attrs, owner=self.collaborator
         )
+        self._desync(path)
+        return n
 
     def offline_index(self, paths: List[str], attr_filter: Optional[List[str]] = None) -> int:
         """LW-Offline extraction on the local DC's DTNs (§III-B5)."""

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import MEU, Collaboration, NativeSession, Workspace
-from repro.core.backends import SYNC_XATTR, PosixBackend
+from repro.core.backends import MemoryBackend, OWNER_XATTR, SYNC_XATTR, PosixBackend
 from repro.core.scidata import read_dataset, write_scidata
 
 
@@ -16,6 +16,58 @@ def test_posix_roundtrip(tmp_path):
     assert sorted(b.listdir("/a")) == ["b"]
     b.write("/a/b/file.bin", b"XY", offset=1)
     assert b.read("/a/b/file.bin") == b"hXYlo"
+
+
+@pytest.mark.parametrize("make", [lambda p: PosixBackend("dc0", str(p / "pfs")),
+                                  lambda p: MemoryBackend("dc0")])
+def test_shorter_rewrite_truncates_stale_tail(tmp_path, make):
+    """Regression: an offset-0 rewrite with shorter data must not leave the
+    old trailing bytes behind (O_TRUNC semantics)."""
+    b = make(tmp_path)
+    b.write("/f.bin", b"A" * 1000)
+    b.write("/f.bin", b"B" * 10)
+    assert b.read("/f.bin") == b"B" * 10
+    assert b.stat("/f.bin").size == 10
+    # a partial (offset > 0) write still patches in place, no truncate
+    b.write("/f.bin", b"CC", offset=4)
+    assert b.read("/f.bin") == b"BBBBCCBBBB"
+
+
+def test_posix_owner_persisted_via_xattrs(tmp_path):
+    root = str(tmp_path / "pfs")
+    b = PosixBackend("dc0", root)
+    b.mkdir("/proj", owner="alice")
+    b.write("/proj/f.bin", b"data", owner="alice")
+    assert b.stat("/proj/f.bin").owner == "alice"
+    assert b.stat("/proj").owner == "alice"
+    # first writer wins: an overwrite by someone else keeps the creator
+    b.write("/proj/f.bin", b"more", owner="bob")
+    assert b.stat("/proj/f.bin").owner == "alice"
+    # survives a re-mount (xattr table persistence)
+    b.flush_xattrs()
+    b2 = PosixBackend("dc0", root)
+    assert b2.stat("/proj/f.bin").owner == "alice"
+    # delete clears ownership for a recreated path
+    b2.delete("/proj/f.bin")
+    b2.write("/proj/f.bin", b"new", owner="carol")
+    assert b2.stat("/proj/f.bin").owner == "carol"
+    assert b2.get_xattr("/proj/f.bin", OWNER_XATTR) == "carol"
+
+
+def test_meu_export_preserves_owner_on_posix(tmp_path):
+    """Ownership recorded at native-write time flows through MEU export."""
+    collab = Collaboration()
+    collab.add_datacenter("dc0", root=str(tmp_path / "dc0"), n_dtns=2)
+    collab.add_datacenter("dc1", root=str(tmp_path / "dc1"), n_dtns=2)
+    native = NativeSession(collab.dc("dc0"), "alice")
+    native.write("/proj/owned.bin", b"payload")
+    # a *different* collaborator runs the export; the paper's MEU exports on
+    # behalf of the data owner, so the entry must carry alice, not carol
+    MEU(collab, collab.dc("dc0"), "carol").export("/proj")
+    ws = Workspace(collab, "bob", "dc1")
+    assert ws.stat("/proj/owned.bin")["owner"] == "alice"
+    ws.close()
+    collab.close()
 
 
 def test_posix_scidata(tmp_path):
