@@ -10,6 +10,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   fig10  replicated metadata tier: replica reads, convergence, journal replay
   fig11  wire-path acceleration: codec fast path, compacted shipping, pruning
   fig12  data plane: striped multi-lane transfers, chunk cache, read-ahead
+  fig13  fault plane: partition failover availability, exactly-once chaos goodput
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -35,6 +36,7 @@ from benchmarks import (
     fig10_replication,
     fig11_wirepath,
     fig12_datapath,
+    fig13_faults,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -69,6 +71,7 @@ def main(argv=None) -> int:
         ("fig10_replication", fig10_replication.main),
         ("fig11_wirepath", fig11_wirepath.main),
         ("fig12_datapath", fig12_datapath.main),
+        ("fig13_faults", fig13_faults.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

@@ -5,8 +5,10 @@
 #   scripts/tier1.sh [extra pytest args...]
 #
 # CI usage: the script exits non-zero when the suite is WORSE than the seed
-# baseline (fewer passes, more failures, or more collection errors) or when
-# pytest itself dies (signal/usage error).  Knobs:
+# baseline (fewer passes, more failures, or more collection errors), when
+# pytest itself dies (signal/usage error), or when the seeded fault-matrix
+# smoke (scripts/fault_matrix.py: canned FaultPlans vs. one retrying
+# workload, byte-identity + exactly-once asserted) goes red.  Knobs:
 #   PYTHON=...        interpreter (default: python)
 #   TIER1_JUNIT=path  also write a junit-xml report for the CI UI
 set -uo pipefail
@@ -59,4 +61,10 @@ if [ "$PASS" -lt "$BASE_PASS" ] || [ "$FAIL" -gt "$BASE_FAIL" ] || [ "$ERR" -gt 
     exit 1
 fi
 echo "tier-1: OK (no worse than baseline)"
+
+echo
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/fault_matrix.py || {
+    echo "tier-1: fault matrix FAILED"
+    exit 1
+}
 exit 0

@@ -16,6 +16,7 @@ from repro.core.datapath import (
     DATA_LANES,
     STRIPE_BYTES,
 )
+from repro.core.plane import BREAKER_COOLDOWN_S, BREAKER_THRESHOLD
 from repro.core.query import SUMMARY_BITS
 from repro.core.replication import (
     COMPACT_WINDOW,
@@ -81,6 +82,35 @@ class TestbedConfig:
     data_lanes: int = DATA_LANES
     chunk_cache_bytes: int = CHUNK_CACHE_BYTES
     readahead: bool = True
+    # fault-plane knobs (core/faults.py, core/rpc.py RetryPolicy, and the
+    # plane's CircuitBreaker; all honored by Workspace(retry=..., ...)):
+    # - retry_enabled: build Workspaces with a RetryPolicy so every RPC and
+    #   striped transfer retries with exponential backoff + decorrelated
+    #   jitter instead of failing fast; mutating RPCs carry idempotency
+    #   tokens so a retried write or replication drain applies exactly once
+    #   (server-side request-id dedup window in RpcServer.handle)
+    # - retry_max_attempts / retry_base_s / retry_cap_s: backoff shape —
+    #   sleep ~ uniform(base, 3*prev) capped at cap_s (decorrelated jitter)
+    # - retry_deadline_s: per-call deadline; no retry is attempted that
+    #   could not complete before it
+    # - retry_budget: per-client cap on total retries, so a melting fabric
+    #   is not amplified by retry storms
+    # - breaker_threshold: consecutive unavailability failures before a
+    #   DTN's circuit breaker opens (closed -> open -> half-open probe)
+    # - breaker_cooldown_s: how long an open breaker waits before admitting
+    #   the single half-open probe
+    # - fault_plan: name of a canned FaultPlan from core.faults.CANNED_PLANS
+    #   ("drops" | "flaky" | "crash" | "chaos"; "" = none) for fault-matrix
+    #   smoke runs — see benchmarks/fig13_faults.py for the how-to
+    retry_enabled: bool = True
+    retry_max_attempts: int = 4
+    retry_base_s: float = 0.002
+    retry_cap_s: float = 0.1
+    retry_deadline_s: float = 2.0
+    retry_budget: int = 1000
+    breaker_threshold: int = BREAKER_THRESHOLD
+    breaker_cooldown_s: float = BREAKER_COOLDOWN_S
+    fault_plan: str = ""
 
 
 TESTBED = TestbedConfig()

@@ -26,16 +26,22 @@ Layers (bottom-up):
   epoch clocks + append-only replication logs, async ReplicaPumps shipping
   mutations to peer DTNs (bounded lag, (epoch, origin) last-writer-wins),
   and the crash-recoverable write-back journal.
+- :mod:`repro.core.faults`     — the **fault plane**: a deterministic,
+  seedable :class:`FaultPlan` injecting drops/delays/duplicates, DTN
+  crashes, torn journal writes and link partitions at the RPC boundary;
+  paired with :class:`~repro.core.rpc.RetryPolicy` (backoff + idempotency
+  tokens), per-DTN circuit breakers, and degraded-mode replica failover.
 """
 
 from .backends import MemoryBackend, OWNER_XATTR, PosixBackend, StorageBackend, SYNC_XATTR
 from .cluster import Collaboration, DataCenter, DTN
-from .datapath import ChunkCache, DataPath
+from .datapath import ChunkCache, DataPath, TransferInterrupted
 from .discovery import AsyncIndexer, DiscoveryService, ExtractionMode
+from .faults import CANNED_PLANS, FaultPlan, TornWrite, canned_plan
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement, path_hash
 from .meu import MEU, ExportReport
 from .namespace import DEFAULT_NS, Namespace, NamespaceRegistry
-from .plane import AttrCache, InvalidationBus, ServicePlane
+from .plane import AttrCache, CircuitBreaker, InvalidationBus, ServicePlane
 from .query import Query, QueryError, ScatterGatherPlan, parse_query, plan_query
 from .replication import (
     EpochClock,
@@ -43,7 +49,19 @@ from .replication import (
     ReplicationLog,
     WriteBackJournal,
 )
-from .rpc import Channel, RpcClient, RpcError, RpcFuture, RpcPipeline, RpcServer, pack, unpack
+from .rpc import (
+    Channel,
+    RetryPolicy,
+    RpcClient,
+    RpcError,
+    RpcFuture,
+    RpcPipeline,
+    RpcServer,
+    RpcTimeout,
+    RpcUnavailable,
+    pack,
+    unpack,
+)
 from .scidata import (
     SciFile,
     attr_type_of,
@@ -65,6 +83,11 @@ __all__ = [
     "DTN",
     "ChunkCache",
     "DataPath",
+    "TransferInterrupted",
+    "CANNED_PLANS",
+    "FaultPlan",
+    "TornWrite",
+    "canned_plan",
     "AsyncIndexer",
     "DiscoveryService",
     "ExtractionMode",
@@ -79,6 +102,7 @@ __all__ = [
     "Namespace",
     "NamespaceRegistry",
     "AttrCache",
+    "CircuitBreaker",
     "InvalidationBus",
     "ServicePlane",
     "EpochClock",
@@ -91,11 +115,14 @@ __all__ = [
     "parse_query",
     "plan_query",
     "Channel",
+    "RetryPolicy",
     "RpcClient",
     "RpcError",
     "RpcFuture",
     "RpcPipeline",
     "RpcServer",
+    "RpcTimeout",
+    "RpcUnavailable",
     "pack",
     "unpack",
     "SciFile",

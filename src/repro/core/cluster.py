@@ -74,8 +74,12 @@ class DTN:
             clock=self.clock, log=self.replication_log, applied=self.applied,
             mutation_lock=self.mutation_lock, **disc_kwargs,
         )
-        self.metadata_server = RpcServer(self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock)
-        self.discovery_server = RpcServer(self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock)
+        self.metadata_server = RpcServer(
+            self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock, site=dc_id
+        )
+        self.discovery_server = RpcServer(
+            self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock, site=dc_id
+        )
         self.async_indexer: Optional[AsyncIndexer] = None
         self.replica_pump: Optional[ReplicaPump] = None
         self._indexer_kwargs: Optional[dict] = None
@@ -83,6 +87,10 @@ class DTN:
     def start_async_indexer(self, **kwargs) -> AsyncIndexer:
         if self.async_indexer is None:
             self._indexer_kwargs = dict(kwargs)
+            if self.down:
+                # deferred: restart() builds the indexer from the saved
+                # kwargs — a crashed DTN must not run background workers
+                return None  # type: ignore[return-value]
             self.async_indexer = AsyncIndexer(self.discovery, **kwargs).start()
         return self.async_indexer
 
@@ -106,7 +114,13 @@ class DTN:
     def restart(self) -> None:
         """Bring a crashed DTN back.  Peers' pumps still hold their cursors,
         so every record this DTN missed while down is re-shipped by the
-        normal drain path — recovery needs no special-case protocol."""
+        normal drain path — recovery needs no special-case protocol.
+
+        The pump restarts here even when ``start_replication`` ran *while
+        this DTN was down* (it creates the pump but cannot start it on a dead
+        node) — the node rejoins the mesh without a second
+        ``start_replication`` call.
+        """
         self.metadata_server.down = False
         self.discovery_server.down = False
         if self.async_indexer is None and self._indexer_kwargs is not None:
@@ -185,6 +199,11 @@ class Collaboration:
         self.channel_policy: ChannelPolicy = channel_policy or _free_channels
         #: collaboration-wide attribute-cache invalidation fabric (plane layer)
         self.invalidations = InvalidationBus()
+        #: active fault plan (``install_faults``); every plane's clients and
+        #: journals consult it through a provider, so None = zero overhead
+        self.fault_plan = None
+        #: why the last quiesce_replication returned False (diagnostics)
+        self.quiesce_reason: Optional[str] = None
         self._lock = threading.Lock()
 
     # -- construction -----------------------------------------------------------
@@ -256,9 +275,17 @@ class Collaboration:
 
         Draining one DTN's log never appends to another's (applies are not
         re-logged), but a single sweep can race a concurrent writer, so loop
-        until a full pass ships nothing.
+        until a full pass ships nothing.  A mid-loop ``crash_dtn`` (or a
+        flapping peer re-entering the reachable set with an old cursor) can
+        make the lag sum *oscillate* instead of shrinking — two consecutive
+        sweeps without net progress return ``False`` promptly with the
+        reason recorded in :attr:`quiesce_reason`, rather than spinning to
+        the deadline.
         """
         deadline = time.time() + timeout_s
+        self.quiesce_reason = None
+        last_lag: Optional[int] = None
+        stalled = 0
         while True:
             for dtn in self.dtns:
                 if dtn.replica_pump is not None and not dtn.down:
@@ -270,7 +297,18 @@ class Collaboration:
             )
             if lag == 0:
                 return True
+            stalled = stalled + 1 if (last_lag is not None and lag >= last_lag) else 0
+            last_lag = lag
+            if stalled >= 2:
+                down = [d.dtn_id for d in self.dtns if d.down]
+                self.quiesce_reason = (
+                    f"no drain progress over {stalled} sweeps: {lag} records still "
+                    f"lagging (down DTNs: {down or 'none'}; peer crashed mid-drain "
+                    "or a writer is outpacing the pumps)"
+                )
+                return False
             if time.time() > deadline:
+                self.quiesce_reason = f"deadline exceeded with {lag} records lagging"
                 return False
 
     def stop_replication(self) -> None:
@@ -283,6 +321,16 @@ class Collaboration:
 
     def restart_dtn(self, dtn_id: int) -> None:
         self.dtns[dtn_id].restart()
+
+    # -- fault plane -------------------------------------------------------------
+    def install_faults(self, plan) -> None:
+        """Install (or, with ``None``, remove) a
+        :class:`~repro.core.faults.FaultPlan`.  Clients consult the plan
+        through a provider callable, so installation takes effect on the next
+        message — including planes and pumps built before this call."""
+        if plan is not None:
+            plan.bind(self)
+        self.fault_plan = plan
 
     # -- lifecycle ---------------------------------------------------------------
     def start_async_indexers(self, **kwargs) -> None:

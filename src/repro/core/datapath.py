@@ -40,18 +40,32 @@ Knobs (``stripe_bytes``, ``data_lanes``, ``chunk_cache_bytes``,
 ``readahead``) ride ``configs/scispace_testbed.py`` → ``Workspace``;
 ``benchmarks/fig12_datapath.py`` measures the three pieces and
 ``scripts/bench_gate.py`` pins their ratios.
+
+Fault tolerance: when a :class:`~repro.core.rpc.RetryPolicy` is installed
+(``retry=``), an interrupted striped transfer **resumes from the last
+completed stripe** instead of restarting from byte zero.  :meth:`_fetch`
+re-checks mover liveness between streams and raises
+:class:`TransferInterrupted` carrying the ranges already delivered;
+:meth:`_fetch_resumable` keeps those parts and refetches only the
+``subtract_ranges`` remainder after a decorrelated-jitter backoff.  Writes
+resume from the last durably-stored chunk — per-chunk offset rewrites are
+idempotent, so a replayed chunk never corrupts the file.  A link-level
+partition in an installed :class:`~repro.core.faults.FaultPlan` blocks the
+data path (``link_blocked``) even while both DCs stay up; cache hits bypass
+the liveness check, so warmed bytes stay readable through the partition.
 """
 
 from __future__ import annotations
 
 import queue
+import random
 import threading
 import time
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
 from .metadata import path_hash
-from .rpc import Channel, RpcError
+from .rpc import Channel, RetryPolicy, RpcError, RpcTimeout, RpcUnavailable
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->datapath cycle
     from .cluster import Collaboration, DataCenter
@@ -59,6 +73,7 @@ if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->datapath c
 __all__ = [
     "ChunkCache",
     "DataPath",
+    "TransferInterrupted",
     "STRIPE_BYTES",
     "DATA_LANES",
     "CHUNK_CACHE_BYTES",
@@ -79,6 +94,18 @@ CHUNK_CACHE_BYTES = 128 << 20
 RANGE_ALIGN = 64 << 10
 
 _Range = Tuple[int, int]
+
+
+class TransferInterrupted(RpcUnavailable):
+    """A striped transfer failed mid-flight.
+
+    ``parts`` carries the ``(offset, bytes)`` streams confirmed delivered
+    before the failure — a retrying caller keeps them and refetches only the
+    remainder (resume-from-last-completed-stripe)."""
+
+    def __init__(self, message: str, *, parts: Sequence[Tuple[int, bytes]] = ()):
+        super().__init__(message)
+        self.parts: List[Tuple[int, bytes]] = list(parts)
 
 
 def merge_ranges(ranges: Sequence[_Range]) -> List[_Range]:
@@ -169,6 +196,12 @@ class ChunkCache:
     def data_bytes(self) -> int:
         with self._lock:
             return self._bytes
+
+    def pinned_count(self) -> int:
+        """Records currently pinned by an in-flight fill/read — must be zero
+        once every transfer (including failed/retried ones) has unwound."""
+        with self._lock:
+            return sum(1 for rec in self._records.values() if rec.pending > 0)
 
     # -- record lifecycle ---------------------------------------------------
     def _get_or_create(self, path: str) -> _Record:
@@ -390,6 +423,7 @@ class ChunkCache:
                 "invalidations": self.invalidations,
                 "evictions": self.evictions,
                 "stale_inserts": self.stale_inserts,
+                "pinned": sum(1 for rec in self._records.values() if rec.pending > 0),
             }
 
 
@@ -413,9 +447,14 @@ class DataPath:
         readahead: bool = True,
         range_align: int = RANGE_ALIGN,
         subscribe: bool = True,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.collab = collab
         self.home_dc = home_dc
+        self.retry = retry
+        self._retry_rng = (
+            random.Random(f"{retry.seed}:datapath:{home_dc}") if retry is not None else None
+        )
         self.stripe_bytes = max(0, int(stripe_bytes))
         self.data_lanes = max(1, int(data_lanes))
         self.readahead = bool(readahead)
@@ -441,6 +480,8 @@ class DataPath:
         self.prefetch_completed = 0
         self.prefetch_bytes = 0
         self.fallback_reads = 0
+        self.interrupted_transfers = 0
+        self.transfer_retries = 0
         # read-ahead worker (started lazily on first prefetch)
         self._queue: "queue.Queue[Optional[tuple]]" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
@@ -456,9 +497,19 @@ class DataPath:
     # -- lane / liveness model ---------------------------------------------
     def _require_live(self, dc: "DataCenter") -> None:
         """The DTNs are the data movers (the paper's role for them): a DC with
-        every DTN down cannot serve its PFS across the WAN."""
+        every DTN down cannot serve its PFS across the WAN; a fault-plan
+        partition blocks the link even while both sides stay up."""
         if dc.dtns and not dc.has_live_dtn():
-            raise RpcError(f"data path to {dc.dc_id} unavailable: no live DTN")
+            raise RpcUnavailable(f"data path to {dc.dc_id} unavailable: no live DTN")
+        plan = getattr(self.collab, "fault_plan", None)
+        if (
+            plan is not None
+            and dc.dc_id != self.home_dc
+            and plan.link_blocked(self.home_dc, dc.dc_id)
+        ):
+            raise RpcTimeout(
+                f"data path {self.home_dc}->{dc.dc_id} unavailable: link partitioned"
+            )
 
     def _lanes(self, dc_id: str) -> List[Channel]:
         lanes = self._lane_pool.get(dc_id)
@@ -544,7 +595,17 @@ class DataPath:
         backend = dc.backend
         parts: List[Tuple[int, bytes]] = []
         pieces: List[Tuple[float, int]] = []
+        failure: Optional[RpcUnavailable] = None
         for s, e in merge_ranges(ranges):
+            if parts:
+                # liveness re-checked between streams: streams whose
+                # completion a live check has witnessed are confirmed
+                # delivered; everything after the failure is not
+                try:
+                    self._require_live(dc)
+                except RpcUnavailable as exc:
+                    failure = exc
+                    break
             data, store_s = backend.read_deferred(path, offset=s, length=e - s)
             if data:
                 parts.append((s, data))
@@ -553,8 +614,18 @@ class DataPath:
                     pieces.append((store_s * (ce - cs) / len(data), ce - cs))
             if len(data) < e - s:
                 break  # short read: EOF inside the range
-        # a DTN crash while chunks were in flight fails the whole transfer
-        self._require_live(dc)
+        if failure is None:
+            # a DTN crash while chunks were in flight fails the transfer
+            try:
+                self._require_live(dc)
+            except RpcUnavailable as exc:
+                failure = exc
+        if failure is not None and parts:
+            # the most recently read stream was in flight at the failure —
+            # not confirmed; drop it (and its lane pieces) so a resume
+            # refetches it rather than trusting a possibly-torn stream
+            s, data = parts.pop()
+            del pieces[len(pieces) - len(self._chop(s, s + len(data))) :]
         makespan = self._handshake_s(dc_id, len(pieces)) + self._makespan_in(
             pieces, self._lanes(dc_id)
         )
@@ -563,12 +634,55 @@ class DataPath:
         moved = sum(len(d) for _, d in parts)
         with self._stats_lock:
             self.wire_seconds += makespan
+            if failure is not None:
+                self.interrupted_transfers += 1
             if prefetch:
                 self.prefetch_bytes += moved
             else:
                 self.remote_reads += 1
                 self.bytes_read += moved
+        if failure is not None:
+            raise TransferInterrupted(str(failure), parts=parts)
         return parts
+
+    def _fetch_resumable(
+        self, dc_id: str, path: str, ranges: Sequence[_Range], *, prefetch: bool = False
+    ) -> List[Tuple[int, bytes]]:
+        """:meth:`_fetch` under the retry policy: an interrupted transfer
+        keeps the streams already delivered and refetches only the
+        ``subtract_ranges`` remainder after a decorrelated-jitter backoff —
+        resume from the last completed stripe, not byte zero.  With no policy
+        installed this is exactly ``_fetch`` (fail-fast)."""
+        policy = self.retry
+        if policy is None:
+            return self._fetch(dc_id, path, ranges, prefetch=prefetch)
+        have: List[Tuple[int, bytes]] = []
+        remaining = merge_ranges(ranges)
+        deadline = time.perf_counter() + policy.deadline_s
+        backoff = policy.base_s
+        attempt = 1
+        while True:
+            try:
+                have.extend(self._fetch(dc_id, path, remaining, prefetch=prefetch))
+                return have
+            except RpcUnavailable as exc:
+                kept = getattr(exc, "parts", ())
+                if kept:
+                    have.extend(kept)
+                    remaining = subtract_ranges(
+                        remaining, [(s, s + len(d)) for s, d in kept]
+                    )
+                    if not remaining:
+                        return have
+                backoff = min(
+                    policy.cap_s, self._retry_rng.uniform(policy.base_s, backoff * 3.0)
+                )
+                if attempt >= policy.max_attempts or time.perf_counter() + backoff > deadline:
+                    raise
+                attempt += 1
+                with self._stats_lock:
+                    self.transfer_retries += 1
+                time.sleep(backoff)
 
     @staticmethod
     def _coalesce_parts(parts: List[Tuple[int, bytes]]) -> List[Tuple[int, bytes]]:
@@ -628,8 +742,8 @@ class DataPath:
         if end <= start:
             return b""
         if not self.cache.enabled:
-            parts = self._fetch(dc_id, path, [(start, end)])
-            return b"".join(d for _, d in parts)
+            parts = self._fetch_resumable(dc_id, path, [(start, end)])
+            return b"".join(d for _, d in sorted(parts))
         self.cache.pin(path, min_epoch=epoch)
         try:
             for _ in range(4):
@@ -642,7 +756,7 @@ class DataPath:
                 to_fetch = subtract_ranges(missing, inflight)
                 if to_fetch:
                     aligned = merge_ranges([self._align(s, e, size) for s, e in to_fetch])
-                    parts = self._coalesce_parts(self._fetch(dc_id, path, aligned))
+                    parts = self._coalesce_parts(self._fetch_resumable(dc_id, path, aligned))
                     for off, data in parts:
                         self.cache.insert(path, gen, off, data, size=size, epoch=epoch)
                 for ev in events:
@@ -653,30 +767,103 @@ class DataPath:
             # serve correctness over caching with one direct fetch
             with self._stats_lock:
                 self.fallback_reads += 1
-            parts = self._fetch(dc_id, path, [(start, end)])
-            return b"".join(d for _, d in parts)
+            parts = self._fetch_resumable(dc_id, path, [(start, end)])
+            return b"".join(d for _, d in sorted(parts))
         finally:
             self.cache.unpin(path)
 
-    def write(self, dc_id: str, path: str, data: bytes, *, owner: str = "", epoch: int = 0) -> int:
-        """Striped multi-lane remote write, write-through into the cache."""
-        dc = self.collab.dc(dc_id)
+    def _write_chunks(
+        self,
+        dc: "DataCenter",
+        path: str,
+        data: bytes,
+        chunks: List[_Range],
+        start_idx: int,
+        *,
+        owner: str,
+    ) -> int:
+        """Ship ``chunks[start_idx:]`` to the owner PFS, re-checking mover
+        liveness between chunks.  Returns the index one past the last chunk
+        *confirmed* stored; on failure raises after accounting the confirmed
+        prefix, so a retry resumes there (offset rewrites are idempotent)."""
         self._require_live(dc)
         backend = dc.backend
-        chunks = self._chop(0, len(data)) or [(0, 0)]
         pieces: List[Tuple[float, int]] = []
-        for cs, ce in chunks:  # ascending: the offset-0 chunk truncates first
+        done = start_idx
+        failure: Optional[RpcUnavailable] = None
+        for cs, ce in chunks[start_idx:]:  # ascending: the offset-0 chunk truncates first
+            if pieces:
+                try:
+                    self._require_live(dc)
+                except RpcUnavailable as exc:
+                    failure = exc
+                    break
             _, store_s = backend.write_deferred(path, data[cs:ce], offset=cs, owner=owner)
             pieces.append((store_s, ce - cs))
-        makespan = self._handshake_s(dc_id, len(pieces)) + self._makespan_out(
-            pieces, self._lanes(dc_id)
+            done += 1
+        if failure is None:
+            try:
+                self._require_live(dc)
+            except RpcUnavailable as exc:
+                failure = exc
+        if failure is not None and pieces:
+            # the chunk in flight at the failure is not confirmed durable —
+            # the resume rewrites it at the same offset
+            pieces.pop()
+            done -= 1
+        makespan = self._handshake_s(dc.dc_id, len(pieces)) + self._makespan_out(
+            pieces, self._lanes(dc.dc_id)
         )
         if makespan > 0:
             time.sleep(makespan)
         with self._stats_lock:
-            self.remote_writes += 1
-            self.bytes_written += len(data)
             self.wire_seconds += makespan
+            self.bytes_written += sum(n for _, n in pieces)
+            if failure is not None:
+                self.interrupted_transfers += 1
+        if failure is not None:
+            wrapped = TransferInterrupted(str(failure))
+            wrapped.chunks_done = done  # resume point for a retried write
+            raise wrapped
+        return done
+
+    def write(self, dc_id: str, path: str, data: bytes, *, owner: str = "", epoch: int = 0) -> int:
+        """Striped multi-lane remote write, write-through into the cache.
+
+        Under the retry policy an interrupted write resumes from the last
+        confirmed chunk — never from byte zero, and never double-counting
+        bytes (a replayed chunk rewrites the same offset)."""
+        dc = self.collab.dc(dc_id)
+        chunks = self._chop(0, len(data)) or [(0, 0)]
+        policy = self.retry
+        done = 0
+        if policy is None:
+            self._write_chunks(dc, path, data, chunks, 0, owner=owner)
+        else:
+            deadline = time.perf_counter() + policy.deadline_s
+            backoff = policy.base_s
+            attempt = 1
+            while True:
+                try:
+                    self._write_chunks(dc, path, data, chunks, done, owner=owner)
+                    break
+                except RpcUnavailable as exc:
+                    done = getattr(exc, "chunks_done", done)
+                    backoff = min(
+                        policy.cap_s,
+                        self._retry_rng.uniform(policy.base_s, backoff * 3.0),
+                    )
+                    if (
+                        attempt >= policy.max_attempts
+                        or time.perf_counter() + backoff > deadline
+                    ):
+                        raise
+                    attempt += 1
+                    with self._stats_lock:
+                        self.transfer_retries += 1
+                    time.sleep(backoff)
+        with self._stats_lock:
+            self.remote_writes += 1
         if self.cache.enabled:
             # our own bytes are the freshest possible copy: supersede any
             # cached extents (a shorter overwrite must not leave a stale
@@ -759,7 +946,9 @@ class DataPath:
                     )
             if not registered:
                 return
-            parts = self._coalesce_parts(self._fetch(dc_id, path, registered, prefetch=True))
+            parts = self._coalesce_parts(
+                self._fetch_resumable(dc_id, path, registered, prefetch=True)
+            )
             gate = self._insert_gate
             if gate is not None:
                 gate.wait(timeout=30.0)  # test hook: hold the insert window open
@@ -800,6 +989,8 @@ class DataPath:
                 "prefetch_completed": self.prefetch_completed,
                 "prefetch_bytes": self.prefetch_bytes,
                 "fallback_reads": self.fallback_reads,
+                "interrupted_transfers": self.interrupted_transfers,
+                "transfer_retries": self.transfer_retries,
             }
         for k, v in self.cache.stats().items():
             out[f"cache_{k}"] = v

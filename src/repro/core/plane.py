@@ -44,12 +44,16 @@ from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Sequence,
 from .metadata import hash_placement, path_hash
 from .query import ShardSummary
 from .replication import WB_MAX_AGE_S, WB_MAX_PENDING, WriteBackJournal
-from .rpc import RpcClient, RpcError
+from .rpc import RetryPolicy, RpcClient, RpcError, RpcUnavailable
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->plane cycle
     from .cluster import Collaboration
 
-__all__ = ["AttrCache", "InvalidationBus", "ServicePlane"]
+__all__ = ["AttrCache", "CircuitBreaker", "InvalidationBus", "ServicePlane"]
+
+#: Circuit-breaker defaults (overridable per plane / per workspace).
+BREAKER_THRESHOLD = 3
+BREAKER_COOLDOWN_S = 0.25
 
 #: Sentinel distinguishing "not cached" from a cached ``None``.
 _MISS = object()
@@ -212,12 +216,77 @@ class AttrCache:
             }
 
 
+class CircuitBreaker:
+    """Per-DTN failure gate: closed -> open -> half-open.
+
+    ``threshold`` consecutive *unavailability* failures open the circuit;
+    while open, :meth:`allow` denies calls instantly (no retry storms, no
+    timeout sleeps against a peer known to be dead).  After ``cooldown_s``
+    one probe call is let through (half-open): success closes the circuit,
+    failure re-opens it for another cooldown.  Application-level errors
+    (a method raising remotely) count as *success* — the peer answered.
+    """
+
+    def __init__(self, threshold: int = BREAKER_THRESHOLD, cooldown_s: float = BREAKER_COOLDOWN_S):
+        self.threshold = max(1, threshold)
+        self.cooldown_s = cooldown_s
+        self.opened = 0  # open transitions (incl. re-opens), for observability
+        self._failures = 0
+        self._opened_at: Optional[float] = None
+        self._probing = False
+        self._lock = threading.Lock()
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            if self._opened_at is None:
+                return "closed"
+            if time.monotonic() - self._opened_at >= self.cooldown_s:
+                return "half-open"
+            return "open"
+
+    def allow(self) -> bool:
+        """May a call proceed right now?  (Half-open admits a single probe.)"""
+        with self._lock:
+            if self._opened_at is None:
+                return True
+            if time.monotonic() - self._opened_at < self.cooldown_s:
+                return False
+            if self._probing:
+                return False
+            self._probing = True
+            return True
+
+    def success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._opened_at = None
+            self._probing = False
+
+    def failure(self) -> None:
+        with self._lock:
+            reopening = self._probing  # a half-open probe just failed
+            self._probing = False
+            self._failures += 1
+            if self._opened_at is not None or self._failures >= self.threshold:
+                if self._opened_at is None or reopening:
+                    self.opened += 1
+                self._opened_at = time.monotonic()
+
+
 class ServicePlane:
     """One client's gateway to every DTN's metadata + discovery service.
 
     ``max_inflight`` bounds how many DTNs a scatter contacts concurrently —
     the fan-out stays fixed as the collaboration grows, instead of spawning
     one thread per DTN per op.
+
+    With a :class:`~repro.core.rpc.RetryPolicy` every client retries
+    unavailability with backoff + idempotency tokens; a per-DTN
+    :class:`CircuitBreaker` (shared by the DTN's meta + sds clients) stops
+    hammering a dead peer, and reads degrade to home-DC replicas
+    (:meth:`stat`'s failover path) instead of failing while the origin is
+    partitioned away.
     """
 
     def __init__(
@@ -234,17 +303,37 @@ class ServicePlane:
         wb_max_age_s: float = WB_MAX_AGE_S,
         prefer_replica: bool = False,
         summary_ttl_s: float = 0.0,
+        retry: Optional[RetryPolicy] = None,
+        breaker_threshold: int = BREAKER_THRESHOLD,
+        breaker_cooldown_s: float = BREAKER_COOLDOWN_S,
+        failover: bool = True,
     ):
         self.collab = collab
         self.home_dc = home_dc
         self.write_back = write_back
         self.prefer_replica = prefer_replica
+        self.retry = retry
+        #: degrade reads to home-DC replicas when the origin is unreachable
+        #: (off = the fail-fast baseline fig13 measures against)
+        self.failover = failover
+        # provider, not a snapshot: plans installed mid-run take effect on
+        # the very next message, and None keeps the hot path overhead-free
+        faults = lambda: getattr(collab, "fault_plan", None)  # noqa: E731
         self.meta: List[RpcClient] = []
         self.sds: List[RpcClient] = []
         for dtn in collab.dtns:
             ch = collab.channel_policy(home_dc, dtn.dc_id)
-            self.meta.append(RpcClient(dtn.metadata_server, ch))
-            self.sds.append(RpcClient(dtn.discovery_server, ch))
+            self.meta.append(
+                RpcClient(dtn.metadata_server, ch, site=home_dc, retry=retry, faults=faults)
+            )
+            self.sds.append(
+                RpcClient(dtn.discovery_server, ch, site=home_dc, retry=retry, faults=faults)
+            )
+        #: one breaker per DTN, shared by that DTN's meta + sds clients —
+        #: a dead DTN takes both services with it
+        self.breakers: List[CircuitBreaker] = [
+            CircuitBreaker(breaker_threshold, breaker_cooldown_s) for _ in collab.dtns
+        ]
         #: global indices of this client's home-DC DTNs (nearest replicas)
         self.local_dtns: List[int] = [
             i for i, dtn in enumerate(collab.dtns) if dtn.dc_id == home_dc
@@ -254,8 +343,17 @@ class ServicePlane:
         #: journal_path each deferred update is on disk before the write is
         #: acknowledged, and leftover records from a crashed predecessor are
         #: replayed into the dirty set here (committed on the next flush)
+        def _journal_fault(frame_len: int) -> Optional[int]:
+            plan = getattr(collab, "fault_plan", None)
+            if plan is None:
+                return None
+            return plan.journal_torn_bytes(plan.next_journal_ordinal(), frame_len)
+
         self.journal = WriteBackJournal(
-            journal_path, max_pending=wb_max_pending, max_age_s=wb_max_age_s
+            journal_path,
+            max_pending=wb_max_pending,
+            max_age_s=wb_max_age_s,
+            fault_hook=_journal_fault,
         )
         for path, kw in self.journal.recover().items():
             self.cache.mark_dirty(path, **kw)
@@ -263,6 +361,12 @@ class ServicePlane:
         self._journal_fences: Dict[str, int] = self.journal.recovered_fences()
         self.replica_hits = 0
         self.replica_stale_fallbacks = 0
+        #: degraded-mode accounting: reads served by replica failover while
+        #: the origin was unreachable, of which stale_serves missed the
+        #: session bar (explicitly flagged), and calls the breaker refused
+        self.degraded_reads = 0
+        self.stale_serves = 0
+        self.breaker_skips = 0
         #: shard-pruning summary cache: dtn_idx -> (epoch, cached_at, summary).
         #: The authoritative pruning source is :meth:`note_summaries_bulk` —
         #: one query-time RPC to a local replica whose filters the
@@ -338,6 +442,29 @@ class ServicePlane:
     def sds_batch(self, dtn_idx: int, calls, **kw) -> List[Any]:
         return self.batch("sds", dtn_idx, calls, **kw)
 
+    # -- circuit-breaker-guarded calls ------------------------------------------
+    def _breaker_check(self, dtn_idx: int) -> None:
+        if not self.breakers[dtn_idx].allow():
+            self.breaker_skips += 1
+            raise RpcUnavailable(f"dtn{dtn_idx}: circuit open")
+
+    def guarded_call(self, service: str, dtn_idx: int, method: str, **kwargs: Any) -> Any:
+        """:meth:`call` through the DTN's circuit breaker: an open circuit
+        fails instantly with :class:`RpcUnavailable` (no timeouts, no retry
+        storm against a dead peer); outcomes feed the breaker state."""
+        self._breaker_check(dtn_idx)
+        breaker = self.breakers[dtn_idx]
+        try:
+            result = self.call(service, dtn_idx, method, **kwargs)
+        except RpcUnavailable:
+            breaker.failure()
+            raise
+        except RpcError:
+            breaker.success()  # the peer answered; the *application* failed
+            raise
+        breaker.success()
+        return result
+
     # -- scatter-gather --------------------------------------------------------
     def _pay_windows(self, delays: List[float]) -> None:
         """Sleep the makespan of a bounded-concurrency fan-out.
@@ -376,7 +503,13 @@ class ServicePlane:
         results: List[Any] = [None] * len(clients)
         delays: List[float] = []
         for i in sorted(targets):
-            results[i], wire = clients[i].call_deferred(method, **targets[i])
+            self._breaker_check(i)
+            try:
+                results[i], wire = clients[i].call_deferred(method, **targets[i])
+            except RpcUnavailable:
+                self.breakers[i].failure()
+                raise
+            self.breakers[i].success()
             delays.append(wire)
         self._pay_windows(delays)
         return results
@@ -396,9 +529,15 @@ class ServicePlane:
             calls = calls_by_dtn[i]
             if not calls:
                 continue
-            out[i], wire = clients[i].call_batch_deferred(
-                calls, return_exceptions=return_exceptions
-            )
+            self._breaker_check(i)
+            try:
+                out[i], wire = clients[i].call_batch_deferred(
+                    calls, return_exceptions=return_exceptions
+                )
+            except RpcUnavailable:
+                self.breakers[i].failure()
+                raise
+            self.breakers[i].success()
             delays.append(wire)
         self._pay_windows(delays)
         return out
@@ -515,9 +654,14 @@ class ServicePlane:
         ):
             nearest = self._nearest_replica(path)
             if nearest is not None:
-                rep = self.meta_call(nearest, "getattr_replica", path=path, origin=owner)
+                try:
+                    rep = self.guarded_call(
+                        "meta", nearest, "getattr_replica", path=path, origin=owner
+                    )
+                except RpcUnavailable:
+                    rep = None  # nearest replica itself is down: try the origin
                 bar = self.seen_epoch(owner)
-                entry = rep.get("entry")
+                entry = rep.get("entry") if rep is not None else None
                 # a missing row is never provably fresh — only positive hits
                 # that meet the session bar are served from the replica
                 if entry is not None and rep.get("applied", 0) >= bar:
@@ -531,10 +675,75 @@ class ServicePlane:
                     }
                     return tagged
                 self.replica_stale_fallbacks += 1
-        entry = self.meta_call(owner, "getattr", path=path)
+        try:
+            entry = self.guarded_call("meta", owner, "getattr", path=path)
+        except RpcUnavailable:
+            # the origin is unreachable (crashed DTN, partitioned link, open
+            # breaker): degrade to the replica tier instead of failing
+            return self._degraded_stat(path, owner)
         if entry is not None:
             self.cache.put(path, entry)
         return entry
+
+    def _degraded_stat(self, path: str, owner: int) -> Optional[Dict[str, Any]]:
+        """Replica failover for :meth:`stat` while the origin is unreachable.
+
+        Serves the row from a home-DC replica when one has applied every
+        epoch this client witnessed from the origin (the same session bar
+        ``prefer_replica`` reads use).  When even the best replica lags the
+        bar, the row is still served — availability over freshness during a
+        partition — but explicitly flagged ``stale`` (and *not* cached, so a
+        healed origin is consulted again).  A bar-meeting replica that has
+        no row proves the path absent.  With no reachable replica (or
+        ``failover=False``, the fail-fast baseline) the original
+        unavailability propagates.
+        """
+        if not self.failover or not getattr(self.collab, "replication_enabled", False):
+            raise RpcUnavailable(f"dtn{owner} unreachable and failover disabled")
+        candidates = [i for i in self.local_dtns if i != owner]
+        start = self._nearest_replica(path)
+        if start in candidates:  # rotate so load spreads like prefer_replica's
+            k = candidates.index(start)
+            candidates = candidates[k:] + candidates[:k]
+        bar = self.seen_epoch(owner)
+        best: Optional[Tuple[int, int, Dict[str, Any]]] = None  # (applied, dtn, entry)
+        absent_proven = False
+        for idx in candidates:
+            try:
+                rep = self.guarded_call(
+                    "meta", idx, "getattr_replica", path=path, origin=owner
+                )
+            except RpcUnavailable:
+                continue
+            applied = int(rep.get("applied", 0))
+            entry = rep.get("entry")
+            if applied >= bar:
+                if entry is None:
+                    absent_proven = True
+                    continue
+                self.degraded_reads += 1
+                self.cache.put(path, entry)
+                tagged = dict(entry)
+                tagged["replica"] = {"dtn": idx, "applied": applied, "behind": 0}
+                tagged["degraded"] = True
+                return tagged
+            if entry is not None and (best is None or applied > best[0]):
+                best = (applied, idx, entry)
+        if best is not None:
+            applied, idx, entry = best
+            self.degraded_reads += 1
+            self.stale_serves += 1
+            tagged = dict(entry)  # NOT cached: a stale row must not stick
+            tagged["replica"] = {"dtn": idx, "applied": applied, "behind": bar - applied}
+            tagged["degraded"] = True
+            tagged["stale"] = True
+            return tagged
+        if absent_proven:
+            self.degraded_reads += 1
+            return None
+        raise RpcUnavailable(
+            f"dtn{owner} unreachable and no home-DC replica could serve {path!r}"
+        )
 
     def note_entry(self, entry: Dict[str, Any]) -> None:
         """Record a row this client just wrote; evict it everywhere else."""
@@ -613,6 +822,16 @@ class ServicePlane:
         return len(dirty)
 
     # -- accounting / lifecycle -------------------------------------------------
+    def resilience_stats(self) -> Dict[str, Any]:
+        """Fault-plane accounting: degraded serves, breaker activity."""
+        return {
+            "degraded_reads": self.degraded_reads,
+            "stale_serves": self.stale_serves,
+            "breaker_skips": self.breaker_skips,
+            "breakers_opened": sum(b.opened for b in self.breakers),
+            "breaker_states": [b.state for b in self.breakers],
+        }
+
     def rpc_stats(self) -> Dict[str, float]:
         agg: Dict[str, float] = {}
         for client in self.meta + self.sds:

@@ -49,6 +49,7 @@ import time
 from collections import Counter
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
+from .faults import TornWrite
 from .rpc import RpcError, pack, unpack
 
 if TYPE_CHECKING:  # pragma: no cover - type-only imports
@@ -563,6 +564,11 @@ class ReplicaPump:
         """Drain until every reachable peer has everything (or timeout)."""
         deadline = time.time() + timeout_s
         while self.lag() > 0:
+            if time.time() > deadline:
+                # honor the deadline even while progressing — a concurrent
+                # writer (or a flapping peer re-entering the reachable set)
+                # can otherwise keep "progress" alive forever
+                return False
             before = self.min_cursor(include_down=False)
             self.drain()
             if self.min_cursor(include_down=False) == before:
@@ -590,7 +596,11 @@ class ReplicaPump:
     def stop(self, drain: bool = True) -> None:
         self._stop.set()
         if self._thread is not None:
-            self._thread.join(timeout=10)
+            # a fault-plane crash can fire from inside this pump's own drain
+            # (the Nth served call was one of ours) — joining ourselves would
+            # deadlock, and the _stop flag already ends the loop on return
+            if self._thread is not threading.current_thread():
+                self._thread.join(timeout=10)
             self._thread = None
         if drain:
             self.drain()
@@ -638,10 +648,14 @@ class WriteBackJournal:
         *,
         max_pending: int = WB_MAX_PENDING,
         max_age_s: float = WB_MAX_AGE_S,
+        fault_hook: Optional[Any] = None,
     ):
         self.path = path
         self.max_pending = max_pending
         self.max_age_s = max_age_s
+        #: fault-plane seam: called with each append's frame length, returns
+        #: how many bytes actually reach the disk (None = intact write)
+        self._fault_hook = fault_hook
         self._lock = threading.Lock()
         self._pending: Dict[str, Dict[str, Any]] = {}
         self._fences: Dict[str, int] = {}
@@ -673,8 +687,19 @@ class WriteBackJournal:
                 self._first_dirty_t = time.time()
             if self._fh is not None:
                 payload = pack({"path": path, "kw": dict(kw), "epoch": epoch, "t": time.time()})
-                self._fh.write(struct.pack("<I", len(payload)))
-                self._fh.write(payload)
+                frame = struct.pack("<I", len(payload)) + payload
+                keep = self._fault_hook(len(frame)) if self._fault_hook is not None else None
+                if keep is not None and keep < len(frame):
+                    # injected torn write: a prefix lands durably, then the
+                    # device fails mid-fsync — recovery must discard the tail
+                    self._fh.write(frame[:keep])
+                    self._fh.flush()
+                    os.fsync(self._fh.fileno())
+                    self._file_dirty = True
+                    raise TornWrite(
+                        f"journal append torn after {keep}/{len(frame)} bytes (injected)"
+                    )
+                self._fh.write(frame)
                 self._fh.flush()
                 os.fsync(self._fh.fileno())
                 self._file_dirty = True

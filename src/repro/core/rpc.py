@@ -34,14 +34,32 @@ hot request/response path).  Malformed or truncated buffers raise
 :class:`CodecError` — a :class:`RpcError` *and* ``ValueError`` — carrying the
 byte offset where decoding failed, and nesting is bounded by a recursion-depth
 guard so hostile buffers cannot blow the interpreter stack.
+
+Fault tolerance
+---------------
+A client built with a :class:`RetryPolicy` retries *unavailability* —
+dropped messages, partitions, down servers, all surfaced as
+:class:`RpcUnavailable` / :class:`RpcTimeout` — with exponential backoff and
+decorrelated jitter, bounded by ``max_attempts``, a per-call ``deadline_s``
+and a per-client retry ``budget``.  Application errors (a method raising)
+never retry.  Every retried request carries the *same* idempotency token
+(``rid``); :class:`RpcServer` keeps a bounded dedup window of
+``rid -> packed reply`` so a retry whose original request actually executed
+(reply lost on the wire) returns the cached reply instead of double-applying
+the mutation.  Fault injection rides the same seam: a client constructed
+with a ``faults`` provider consults the collaboration's
+:class:`~repro.core.faults.FaultPlan` on every transmission, which can drop,
+delay, duplicate or block the message deterministically.
 """
 
 from __future__ import annotations
 
 import io
+import random
 import struct
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -55,6 +73,9 @@ __all__ = [
     "RpcClient",
     "RpcError",
     "CodecError",
+    "RpcUnavailable",
+    "RpcTimeout",
+    "RetryPolicy",
     "RpcFuture",
     "RpcPipeline",
     "RpcStats",
@@ -135,6 +156,17 @@ def _str_bytes(value: str) -> bytes:
 
 class RpcError(RuntimeError):
     """A remote call failed; carries the remote exception message."""
+
+
+class RpcUnavailable(RpcError):
+    """The peer could not be reached (down server, dropped message,
+    partitioned link, open circuit breaker).  The *retryable* failure class:
+    the request may or may not have executed, which is exactly why retried
+    requests carry idempotency tokens."""
+
+
+class RpcTimeout(RpcUnavailable):
+    """A message (request or reply) was lost and the call timed out waiting."""
 
 
 class CodecError(RpcError, ValueError):
@@ -503,6 +535,30 @@ class Channel:
 LOOPBACK = Channel(name="loopback")
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry schedule for *unavailability* failures on one client.
+
+    ``timeout_s`` is the modeled cost of discovering a lost message (how long
+    the caller waits before concluding the request or reply is gone) — it is
+    slept, like channel delays, so fault benchmarks measure realistic goodput.
+    Backoff is exponential with decorrelated jitter (``sleep = min(cap_s,
+    uniform(base_s, prev_sleep * 3))``), bounded three ways: ``max_attempts``
+    total tries per call, a per-call ``deadline_s`` the next backoff may not
+    overshoot, and a per-client retry ``budget`` so a melting-down peer can't
+    absorb unbounded retry traffic.  ``seed`` makes jitter deterministic per
+    client (clients mix in their ordinal) for reproducible fault runs.
+    """
+
+    max_attempts: int = 4
+    base_s: float = 0.002
+    cap_s: float = 0.1
+    timeout_s: float = 0.002
+    deadline_s: float = 2.0
+    budget: int = 1000
+    seed: int = 0
+
+
 # ---------------------------------------------------------------------------
 # Client / server
 # ---------------------------------------------------------------------------
@@ -524,6 +580,12 @@ class RpcStats:
     bytes_received: int = 0
     pack_seconds: float = 0.0
     wire_seconds: float = 0.0
+    #: transmissions re-sent after an unavailability failure
+    retries: int = 0
+    #: lost-message / down-peer events observed (each may or may not retry)
+    timeouts: int = 0
+    #: calls that failed with unavailability after exhausting the policy
+    failures: int = 0
 
     def snapshot(self) -> Dict[str, float]:
         return {
@@ -533,6 +595,9 @@ class RpcStats:
             "bytes_received": self.bytes_received,
             "pack_seconds": self.pack_seconds,
             "wire_seconds": self.wire_seconds,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "failures": self.failures,
         }
 
 
@@ -545,13 +610,33 @@ class RpcServer:
     current epoch, so clients accumulate a per-server high-water mark —
     the freshness bar replica reads are judged against.  ``down`` simulates
     a crashed/partitioned DTN: every request fails with an RpcError.
+
+    Requests carrying an idempotency token (``rid``, attached by clients
+    running under a :class:`RetryPolicy`) are deduplicated through a bounded
+    LRU window of ``rid -> packed reply``: a duplicate delivery — a network
+    dup, or a retry whose original executed but whose reply was lost —
+    returns the cached reply bytes without re-dispatching, so retried
+    mutations apply exactly once.  ``deduped`` counts suppressed replays.
     """
 
-    def __init__(self, service: Any, name: str = "service", clock: Any = None):
+    def __init__(
+        self,
+        service: Any,
+        name: str = "service",
+        clock: Any = None,
+        *,
+        site: str = "",
+        dedup_window: int = 1024,
+    ):
         self._service = service
         self.name = name
         self.clock = clock
         self.down = False
+        #: dc_id this server lives in — the fault plane keys link rules on it
+        self.site = site
+        self.dedup_window = dedup_window
+        self.deduped = 0
+        self._dedup: "OrderedDict[str, bytes]" = OrderedDict()
         self._lock = threading.Lock()
 
     def handle(self, request: bytes) -> bytes:
@@ -560,6 +645,15 @@ class RpcServer:
         # zero-copy: bytes payloads (file writes, scidata blobs) dispatch into
         # the service as subviews of the request buffer, never re-copied
         req = unpack(request, copy=False)
+        rid = req.get("rid")
+        if rid is not None:
+            with self._lock:
+                cached = self._dedup.get(rid)
+                if cached is not None:
+                    self._dedup.move_to_end(rid)
+            if cached is not None:
+                self.deduped += 1
+                return cached
         if self.clock is not None and req.get("epoch"):
             self.clock.observe(int(req["epoch"]))
         if "batch" in req:
@@ -573,7 +667,13 @@ class RpcServer:
             # the freshness bar: this origin's own last mutation, not the
             # merged Lamport value (see EpochClock.last_local)
             reply["epoch"] = self.clock.last_local()
-        return pack(reply)
+        out = pack(reply)
+        if rid is not None:
+            with self._lock:
+                self._dedup[rid] = out
+                while len(self._dedup) > self.dedup_window:
+                    self._dedup.popitem(last=False)
+        return out
 
     def _dispatch(self, req: Dict[str, Any]) -> Dict[str, Any]:
         method = req["method"]
@@ -622,18 +722,105 @@ class RpcFuture:
 
 
 class RpcClient:
-    """Client stub: packs the call, crosses the channel both ways, unpacks."""
+    """Client stub: packs the call, crosses the channel both ways, unpacks.
 
-    def __init__(self, server: RpcServer, channel: Channel = LOOPBACK):
+    With a :class:`RetryPolicy`, every call carries an idempotency token and
+    unavailability (down peer, dropped message, partition) is retried with
+    backoff until the policy's attempt/deadline/budget bounds trip; without
+    one the client fails fast exactly as before.  ``faults`` is a zero-arg
+    provider returning the active :class:`~repro.core.faults.FaultPlan` (or
+    ``None``) — a provider rather than the plan itself so plans installed
+    after client construction still take effect.
+    """
+
+    _ordinal = 0
+    _ordinal_lock = threading.Lock()
+
+    def __init__(
+        self,
+        server: RpcServer,
+        channel: Channel = LOOPBACK,
+        *,
+        site: str = "",
+        retry: Optional[RetryPolicy] = None,
+        faults: Optional[Callable[[], Any]] = None,
+    ):
         self._server = server
         self.channel = channel
         self.stats = RpcStats()
+        #: dc_id this client calls from; the fault plane keys link rules on
+        #: the (client site -> server site) pair
+        self.site = site
+        self.retry = retry
+        self._faults = faults
         #: highest epoch witnessed in this server's reply envelopes — the
         #: session-consistency bar for replica reads of rows it originates
         self.last_epoch = 0
         # reusable request framer: capacity persists across calls, so batch
         # frames stop paying per-call buffer growth once warmed up
         self._frame = bytearray()
+        with RpcClient._ordinal_lock:
+            ordinal = RpcClient._ordinal
+            RpcClient._ordinal += 1
+        if retry is not None:
+            self._rid_prefix = f"c{ordinal}"
+            self._rid_seq = 0
+            self._retry_budget = retry.budget
+            # decorrelated jitter, deterministic per (policy seed, client)
+            self._retry_rng = random.Random(f"{retry.seed}:{ordinal}")
+
+    def _lost(self, why: str) -> None:
+        """A message went missing: pay the modeled detection cost and raise."""
+        self.stats.timeouts += 1
+        policy = self.retry
+        if policy is not None and policy.timeout_s > 0:
+            time.sleep(policy.timeout_s)
+        raise RpcTimeout(why)
+
+    def _transmit(self, request: bytes, defer_wire: bool) -> Tuple[bytes, float]:
+        """One attempt: cross the channel, dispatch, cross back.
+
+        Consults the fault plan (if any) before touching the wire; raises
+        :class:`RpcTimeout` for lost messages / partitions and
+        :class:`RpcUnavailable` for a down server.  A *duplicate* delivery
+        dispatches the same request twice — the server's dedup window is what
+        keeps the second apply from happening.
+        """
+        fx = None
+        plan = self._faults() if self._faults is not None else None
+        if plan is not None:
+            fx = plan.on_message(self.site, self._server, len(request))
+            if fx is not None:
+                if fx.blocked:
+                    self._lost(
+                        f"link {self.site or '?'}->{self._server.site or '?'} partitioned"
+                    )
+                if fx.drop_request:
+                    self._lost(f"request to {self._server.name} dropped")
+        if self._server.down:
+            # a dead peer never answers; surfaced as unavailability so the
+            # retry policy (not the application) owns what happens next
+            self._lost(f"ServiceDown: {self._server.name} is unreachable")
+        delay_s = fx.delay_s if fx is not None else 0.0
+        if defer_wire:
+            wire = delay_s + self.channel.delay_for(len(request))
+            response = self._server.handle(request)
+            if fx is not None and fx.duplicate:
+                self._server.handle(request)
+            wire += self.channel.delay_for(len(response))
+        else:
+            t0 = time.perf_counter()
+            if delay_s > 0:
+                time.sleep(delay_s)
+            self.channel.transmit(len(request))
+            response = self._server.handle(request)
+            if fx is not None and fx.duplicate:
+                self._server.handle(request)
+            self.channel.transmit(len(response))
+            wire = time.perf_counter() - t0
+        if fx is not None and fx.drop_reply:
+            self._lost(f"reply from {self._server.name} dropped")
+        return response, wire
 
     def _round_trip(
         self, message: Dict[str, Any], n_ops: int, defer_wire: bool = False
@@ -650,20 +837,47 @@ class RpcClient:
         t0 = time.perf_counter()
         if self.last_epoch:
             message = dict(message, epoch=self.last_epoch)
+        policy = self.retry
+        if policy is not None:
+            # same rid across every retry of this call — that identity is
+            # what the server's dedup window keys exactly-once on
+            self._rid_seq += 1
+            message = dict(message, rid=f"{self._rid_prefix}.{self._rid_seq}")
         frame = self._frame
         del frame[:]
         _pack_into(frame, message)
         request = bytes(frame)
         t1 = time.perf_counter()
-        if defer_wire:
-            wire = self.channel.delay_for(len(request))
-            response = self._server.handle(request)
-            wire += self.channel.delay_for(len(response))
+        if policy is None:
+            try:
+                response, wire = self._transmit(request, defer_wire)
+            except RpcUnavailable:
+                self.stats.failures += 1
+                raise
         else:
-            self.channel.transmit(len(request))
-            response = self._server.handle(request)
-            self.channel.transmit(len(response))
-            wire = time.perf_counter() - t1
+            deadline = t1 + policy.deadline_s
+            backoff = policy.base_s
+            attempt = 1
+            while True:
+                try:
+                    response, wire = self._transmit(request, defer_wire)
+                    break
+                except RpcUnavailable:
+                    backoff = min(
+                        policy.cap_s, self._retry_rng.uniform(policy.base_s, backoff * 3)
+                    )
+                    if (
+                        attempt >= policy.max_attempts
+                        or self._retry_budget <= 0
+                        or time.perf_counter() + backoff > deadline
+                    ):
+                        self.stats.failures += 1
+                        raise
+                    attempt += 1
+                    self._retry_budget -= 1
+                    self.stats.retries += 1
+                    if backoff > 0:
+                        time.sleep(backoff)
         t2 = time.perf_counter()
         resp = unpack(response, copy=False)
         t3 = time.perf_counter()

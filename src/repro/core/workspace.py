@@ -56,6 +56,7 @@ from .datapath import CHUNK_CACHE_BYTES, DATA_LANES, DataPath, STRIPE_BYTES
 from .discovery import ExtractionMode
 from .plane import ServicePlane
 from .query import plan_query
+from .rpc import RetryPolicy, RpcUnavailable
 from .scidata import (
     SciFile,
     dataset_range,
@@ -100,12 +101,23 @@ class Workspace:
         data_lanes: int = DATA_LANES,
         chunk_cache_bytes: int = CHUNK_CACHE_BYTES,
         readahead: bool = True,
+        retry: Optional[RetryPolicy] = None,
+        breaker_threshold: Optional[int] = None,
+        breaker_cooldown_s: Optional[float] = None,
+        failover: bool = True,
     ):
         """``stripe_bytes`` / ``data_lanes`` shape the striped multi-lane
         transfer (0 / 1 restore the single-shot path); ``chunk_cache_bytes``
         sizes the consistent remote-read chunk cache (0 disables it);
         ``readahead`` toggles asynchronous scidata payload prefetch.  All
-        four ride :class:`~repro.configs.scispace_testbed.TestbedConfig`."""
+        four ride :class:`~repro.configs.scispace_testbed.TestbedConfig`.
+
+        ``retry`` (a :class:`~repro.core.rpc.RetryPolicy`) makes every RPC
+        and striped transfer retry unavailability with backoff + idempotency
+        tokens; ``breaker_*`` tune the per-DTN circuit breakers; ``failover``
+        lets stat/ls/search degrade to home-DC replicas (stale rows flagged)
+        while an origin is unreachable — ``False`` is the fail-fast
+        baseline."""
         if extraction_mode not in ExtractionMode.ALL:
             raise ValueError(f"unknown extraction mode {extraction_mode!r}")
         self.collab = collab
@@ -127,6 +139,8 @@ class Workspace:
             write_back=write_back,
             journal_path=journal_path,
             prefer_replica=prefer_replica,
+            retry=retry,
+            failover=failover,
         )
         if wb_max_pending is not None:
             plane_kwargs["wb_max_pending"] = wb_max_pending
@@ -134,6 +148,10 @@ class Workspace:
             plane_kwargs["wb_max_age_s"] = wb_max_age_s
         if summary_ttl_s is not None:
             plane_kwargs["summary_ttl_s"] = summary_ttl_s
+        if breaker_threshold is not None:
+            plane_kwargs["breaker_threshold"] = breaker_threshold
+        if breaker_cooldown_s is not None:
+            plane_kwargs["breaker_cooldown_s"] = breaker_cooldown_s
         self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
         # The data plane: every cross-DC byte moves through it (striped
         # lanes + chunk cache + read-ahead); home-DC bytes stay direct.
@@ -144,6 +162,7 @@ class Workspace:
             data_lanes=data_lanes,
             chunk_cache_bytes=chunk_cache_bytes,
             readahead=readahead,
+            retry=retry,
         )
         # our own metadata publications must not evict our own freshly
         # written-through chunks
@@ -303,10 +322,13 @@ class Workspace:
         the shard's applied watermarks for the freshness judgement."""
         if not (self.prefer_replica and self.collab.replication_enabled and self.plane.local_dtns):
             return None
-        per_dtn = self.plane.scatter(
-            "meta", f"{method}_replica",
-            per_dtn_kwargs={i: dict(kw) for i in self.plane.local_dtns},
-        )
+        try:
+            per_dtn = self.plane.scatter(
+                "meta", f"{method}_replica",
+                per_dtn_kwargs={i: dict(kw) for i in self.plane.local_dtns},
+            )
+        except RpcUnavailable:
+            return None  # a home replica is down: the fan-out path decides
         bars = self.plane.seen_epochs()
         merged: List[Any] = [None] * len(per_dtn)
         for i in self.plane.local_dtns:
@@ -322,26 +344,79 @@ class Workspace:
             merged[i] = reply.get("entries")
         return merged
 
+    def _flush_for_listing(self) -> None:
+        """Write-back entries must be visible to listings — but during an
+        outage the flush owner may be unreachable; the journal keeps the
+        updates and retries later, and the listing proceeds degraded."""
+        try:
+            self.plane.flush()
+        except RpcUnavailable:
+            pass
+
+    def _degraded_listing(
+        self, method: str, kw: Dict[str, Any], exc: RpcUnavailable
+    ) -> List[Dict[str, Any]]:
+        """Listing failover: some DTN in the fan-out is unreachable, so serve
+        the whole listing from home-DC replicas.  Replicas that lag this
+        mount's session bar still serve — availability over freshness — but
+        every returned row is then flagged ``stale``.  With no reachable
+        replica (or ``failover=False``) the original failure propagates."""
+        plane = self.plane
+        if not (plane.failover and self.collab.replication_enabled and plane.local_dtns):
+            raise exc
+        bars = plane.seen_epochs()
+        per_dtn: List[Any] = [None] * plane.n_dtns()
+        reached = False
+        stale = False
+        for i in plane.local_dtns:
+            try:
+                reply = plane.guarded_call("meta", i, f"{method}_replica", **kw)
+            except RpcUnavailable:
+                continue
+            reached = True
+            applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
+            if not all(
+                applied.get(o, 0) >= bar for o, bar in bars.items() if bar > 0 and o != i
+            ):
+                stale = True
+            per_dtn[i] = reply.get("entries")
+        if not reached:
+            raise exc
+        plane.degraded_reads += 1
+        merged = self._merge_listing(per_dtn)
+        if stale:
+            plane.stale_serves += 1
+            merged = [dict(e, stale=True) for e in merged]
+        return merged
+
     def ls(self, path: str = "/") -> List[Dict[str, Any]]:
         """Scatter-gather listings (§III-B1), bounded fan-out; with
         ``prefer_replica`` only the home-DC replicas are contacted (full
-        fan-out fallback when they are stale)."""
+        fan-out fallback when they are stale).  An unreachable DTN degrades
+        the listing to home-DC replicas (rows flagged ``stale`` when the
+        session bar is unmet) instead of failing."""
         path = _norm(path)
-        self.plane.flush()  # write-back entries must be visible to listings
+        self._flush_for_listing()
         kw = {"parent": path, "requester": self.collaborator}
         per_dtn = self._replica_listing("list_dir", kw)
         if per_dtn is None:
-            per_dtn = self.plane.scatter("meta", "list_dir", kw)
+            try:
+                per_dtn = self.plane.scatter("meta", "list_dir", kw)
+            except RpcUnavailable as exc:
+                return self._degraded_listing("list_dir", kw, exc)
         return self._merge_listing(per_dtn)
 
     def find(self, prefix: str = "/") -> List[Dict[str, Any]]:
         """Recursive listing (global view of all shared datasets)."""
         prefix = _norm(prefix)
-        self.plane.flush()
+        self._flush_for_listing()
         kw = {"requester": self.collaborator, "prefix": prefix}
         per_dtn = self._replica_listing("list_all", kw)
         if per_dtn is None:
-            per_dtn = self.plane.scatter("meta", "list_all", kw)
+            try:
+                per_dtn = self.plane.scatter("meta", "list_all", kw)
+            except RpcUnavailable as exc:
+                return self._degraded_listing("list_all", kw, exc)
         return self._merge_listing(per_dtn)
 
     def delete(self, path: str) -> None:
@@ -463,22 +538,26 @@ class Workspace:
         msg = {"predicates": all_preds}
         if self.prefer_replica and self.collab.replication_enabled and self.plane.local_dtns:
             nearest = self.plane.local_dtns[0]
-            reply = self.plane.sds_call(nearest, "scatter_query", **msg)
-            applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
-            fresh = all(
-                applied.get(i, 0) >= bar
-                for i, bar in self.plane.seen_epochs().items()
-                if bar > 0 and i != nearest
-            )
-            self.plane.note_summary(nearest, reply)
-            if fresh:
-                paths = set(plan.merge([reply["matches"]]))
-                return [
-                    {"path": row["path"], "attrs": row["attrs"], "replica": {"dtn": nearest}}
-                    for row in reply["rows"]
-                    if row["path"] in paths
-                ]
-            self.plane.replica_stale_fallbacks += 1
+            try:
+                reply = self.plane.guarded_call("sds", nearest, "scatter_query", **msg)
+            except RpcUnavailable:
+                reply = None  # nearest replica down: the fan-out path decides
+            if reply is not None:
+                applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
+                fresh = all(
+                    applied.get(i, 0) >= bar
+                    for i, bar in self.plane.seen_epochs().items()
+                    if bar > 0 and i != nearest
+                )
+                self.plane.note_summary(nearest, reply)
+                if fresh:
+                    paths = set(plan.merge([reply["matches"]]))
+                    return [
+                        {"path": row["path"], "attrs": row["attrs"], "replica": {"dtn": nearest}}
+                        for row in reply["rows"]
+                        if row["path"] in paths
+                    ]
+                self.plane.replica_stale_fallbacks += 1
         n_shards = self.plane.n_dtns()
         summaries = (
             self.plane.fresh_summaries() if self.prune_queries else {}
@@ -492,11 +571,14 @@ class Workspace:
             # one intra-DC RPC fetches every shard's filter from a home-DC
             # replica (the replication log ships + maintains them there);
             # each filter is session-gated on the replica's applied map
-            warmed = self.plane.note_summaries_bulk(
-                self.plane.sds_call(self.plane.local_dtns[0], "summaries")
-            )
-            warmed.update(summaries)
-            summaries = warmed
+            try:
+                warmed = self.plane.note_summaries_bulk(
+                    self.plane.guarded_call("sds", self.plane.local_dtns[0], "summaries")
+                )
+                warmed.update(summaries)
+                summaries = warmed
+            except RpcUnavailable:
+                pass  # no pruning help available; full pushdown still works
         decision = plan.prune(summaries, n_shards)
         self.plane.shard_contacts += decision.contacted()
         self.plane.shards_pruned += decision.pruned_shards
@@ -505,14 +587,17 @@ class Workspace:
             # provably empty; answered without contacting any shard
             self.plane.pruned_empty_queries += 1
             return []
-        per_dtn = self.plane.scatter(
-            "sds",
-            "scatter_query",
-            per_dtn_kwargs={
-                i: {"predicates": [all_preds[j] for j in idxs]}
-                for i, idxs in decision.send.items()
-            },
-        )
+        try:
+            per_dtn = self.plane.scatter(
+                "sds",
+                "scatter_query",
+                per_dtn_kwargs={
+                    i: {"predicates": [all_preds[j] for j in idxs]}
+                    for i, idxs in decision.send.items()
+                },
+            )
+        except RpcUnavailable as exc:
+            return self._degraded_search(plan, all_preds, exc)
         # re-inflate each reply's match lists to global predicate positions:
         # a pruned (shard, predicate) pair contributes the empty set its
         # summary proved, so the union-then-intersect merge is unchanged
@@ -537,6 +622,43 @@ class Workspace:
                     merged.setdefault(row["path"], {}).update(row["attrs"])
         return [{"path": p, "attrs": merged[p]} for p in sorted(merged)]
 
+    def _degraded_search(self, plan, all_preds, exc: RpcUnavailable) -> List[Dict[str, Any]]:
+        """Search failover: answer the whole query from ONE home-DC replica
+        shard (it holds a replica of every origin's rows) while part of the
+        fan-out is unreachable.  Rows are flagged ``degraded`` — and
+        ``stale`` when the replica lags this mount's session bar."""
+        plane = self.plane
+        if not (plane.failover and self.collab.replication_enabled and plane.local_dtns):
+            raise exc
+        bars = plane.seen_epochs()
+        for i in plane.local_dtns:
+            try:
+                reply = plane.guarded_call("sds", i, "scatter_query", predicates=all_preds)
+            except RpcUnavailable:
+                continue
+            applied = {int(k): v for k, v in (reply.get("applied") or {}).items()}
+            stale = not all(
+                applied.get(o, 0) >= bar for o, bar in bars.items() if bar > 0 and o != i
+            )
+            plane.degraded_reads += 1
+            if stale:
+                plane.stale_serves += 1
+            paths = set(plan.merge([reply["matches"]]))
+            out = []
+            for row in reply["rows"]:
+                if row["path"] in paths:
+                    e = {
+                        "path": row["path"],
+                        "attrs": row["attrs"],
+                        "replica": {"dtn": i},
+                        "degraded": True,
+                    }
+                    if stale:
+                        e["stale"] = True
+                    out.append(e)
+            return out
+        raise exc
+
     def search_paths(self, query: str) -> List[str]:
         return [e["path"] for e in self.search(query)]
 
@@ -546,6 +668,10 @@ class Workspace:
 
     def cache_stats(self) -> Dict[str, int]:
         return self.plane.cache.stats()
+
+    def resilience_stats(self) -> Dict[str, Any]:
+        """Degraded-mode + breaker accounting (see ServicePlane)."""
+        return self.plane.resilience_stats()
 
     def data_stats(self) -> Dict[str, Any]:
         """Data-plane accounting: transfers, bytes, wire time, chunk-cache
