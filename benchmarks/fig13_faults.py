@@ -32,7 +32,8 @@ Faults are injected at the RPC boundary by a deterministic, seedable
     collab.install_faults(plan)               # arm; install_faults(None) heals
 
 Canned plans for CI replay live in ``repro.core.faults.CANNED_PLANS``
-("drops" | "flaky" | "crash" | "chaos"); build one with
+("drops" | "flaky" | "crash" | "chaos" | "quorum" | "lease-expiry"); build
+one with
 ``canned_plan(name, seed)``.  Pair the plan with a workspace built with a
 ``RetryPolicy`` (and ``failover=True``) so RPCs retry with backoff +
 idempotency tokens instead of failing fast; ``plan.stats()`` and

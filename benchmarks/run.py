@@ -11,6 +11,7 @@ Paper experiments (ratios/trends are the reproduction target — DESIGN.md §8):
   fig11  wire-path acceleration: codec fast path, compacted shipping, pruning
   fig12  data plane: striped multi-lane transfers, chunk cache, read-ahead
   fig13  fault plane: partition failover availability, exactly-once chaos goodput
+  fig14  partition-tolerant writes: quorum availability, heal-time convergence
 Framework:
   ckpt_stall  LW+MEU vs workspace checkpointing
   dryrun      one representative cell (full table: results/dryrun_all.json)
@@ -37,6 +38,7 @@ from benchmarks import (
     fig11_wirepath,
     fig12_datapath,
     fig13_faults,
+    fig14_quorum,
     tab2_query,
 )
 from benchmarks.common import RESULTS_DIR
@@ -72,6 +74,7 @@ def main(argv=None) -> int:
         ("fig11_wirepath", fig11_wirepath.main),
         ("fig12_datapath", fig12_datapath.main),
         ("fig13_faults", fig13_faults.main),
+        ("fig14_quorum", fig14_quorum.main),
         ("ckpt_stall", ckpt_stall.main),
     ]
     failures = 0

@@ -7,10 +7,12 @@
 # Runs the fig7 block-size sweep, the fig9d metadata-plane benchmark, the
 # fig10 replication-tier benchmark, the fig11 wire-path benchmark (codec fast
 # path, compacted shipping, shard pruning), and the fig12 data-plane benchmark
-# (striped multi-lane transfers, chunk cache, scidata read-ahead), and the
+# (striped multi-lane transfers, chunk cache, scidata read-ahead), the
 # fig13 fault-plane benchmark (partition failover availability, exactly-once
-# chaos goodput), writing results/fig{7,9d,10,11,12,13}*.json.  Exits
-# non-zero when a benchmark errors, a fig7/fig10/fig11/fig12/fig13 claim
+# chaos goodput), and the fig14 quorum benchmark (partition-tolerant write
+# availability, heal-time convergence), writing
+# results/fig{7,9d,10,11,12,13,14}*.json.  Exits non-zero when a benchmark
+# errors, a fig7/fig10/fig11/fig12/fig13/fig14 claim
 # fails (their main() raises), or the
 # perf-regression gate trips: scripts/bench_gate.py compares the key
 # speedup/reduction ratios against the committed baseline
@@ -32,6 +34,7 @@ from benchmarks import (
     fig11_wirepath,
     fig12_datapath,
     fig13_faults,
+    fig14_quorum,
 )
 
 fig7_blocksize.main(quick=$QUICK)  # raises if LW stops beating the baseline
@@ -46,10 +49,12 @@ print()
 fig12_datapath.main(quick=$QUICK)  # raises if a data-plane claim fails
 print()
 fig13_faults.main(quick=$QUICK)  # raises if a fault-plane claim fails
+print()
+fig14_quorum.main(quick=$QUICK)  # raises if a quorum/lease claim fails
 EOF
 
 echo
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/bench_gate.py
 
 echo
-echo "bench: OK (results/fig{7_blocksize,9d_plane,10_replication,11_wirepath,12_datapath,13_faults}.json)"
+echo "bench: OK (results/fig{7_blocksize,9d_plane,10_replication,11_wirepath,12_datapath,13_faults,14_quorum}.json)"

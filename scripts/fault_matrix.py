@@ -5,8 +5,9 @@
 
 Runs a compact collaboration workload (write + tag + search + cross-DC
 read-back, two workspaces on opposite DCs) once per canned
-:class:`repro.core.faults.FaultPlan` ("drops", "flaky", "crash", "chaos" —
-see benchmarks/fig13_faults.py for the injection how-to) and asserts, for
+:class:`repro.core.faults.FaultPlan` ("drops", "flaky", "crash", "chaos",
+"quorum", "lease-expiry" — see benchmarks/fig13_faults.py and
+benchmarks/fig14_quorum.py for the injection how-to) and asserts, for
 every cell of the matrix:
 
 - the workload **completes** (retries + backoff ride out every injected
@@ -17,6 +18,13 @@ every cell of the matrix:
   injects nothing would be vacuous);
 - retried mutations applied **exactly once** wherever a request or reply was
   dropped or duplicated (server-side dedup counters are the witness).
+
+The partition plans ("quorum", "lease-expiry") get a dedicated workload:
+writes targeting far-DC owners must come back *degraded* (epoch-fenced
+lease + quorum acknowledgement on the reachable side, ``blocked > 0``
+proving the link was actually severed), and after ``install_faults(None)``
++ ``Collaboration.reconcile()`` every DTN must agree byte-identically and
+every read-back must match what was written into the partition.
 
 Plans are seeded, so a red cell replays deterministically with the printed
 seed.  Exit code 0 = all cells green; the failing plan name is in the
@@ -49,6 +57,16 @@ RETRY = RetryPolicy(
     deadline_s=10.0, budget=100_000,
 )
 
+#: short fuse for the partition cells: a severed link should hand the write
+#: to the quorum/lease path fast instead of retrying into the void
+PARTITION_RETRY = RetryPolicy(
+    max_attempts=2, base_s=0.0005, cap_s=0.002, timeout_s=0.0,
+    deadline_s=0.5, budget=100_000,
+)
+
+#: plans whose headline fault is a severed inter-DC link
+PARTITION_PLANS = {"quorum", "lease-expiry"}
+
 
 def _make_collab() -> Collaboration:
     def channels(a: str, b: str) -> Channel:
@@ -67,7 +85,68 @@ def _deduped(collab: Collaboration) -> int:
     )
 
 
+def _owned_paths(collab: Collaboration, dc_id: str, n: int) -> list:
+    out = []
+    for i in range(2000):
+        p = f"/shared/q{i}.dat"
+        if collab.owner_dtn(p).dc_id == dc_id:
+            out.append(p)
+            if len(out) == n:
+                return out
+    raise RuntimeError(f"could not find {n} {dc_id}-owned paths")
+
+
+def run_partition_cell(name: str, seed: int) -> str:
+    """Partition cell: degraded quorum writes, then heal-time convergence."""
+    collab = _make_collab()
+    collab.start_replication(max_age_s=0.02, poll_s=0.005)
+    try:
+        alice = Workspace(collab, "alice", "dc0", extraction_mode="none",
+                          retry=PARTITION_RETRY)
+        bob = Workspace(collab, "bob", "dc1", extraction_mode="none", retry=RETRY)
+        paths = _owned_paths(collab, "dc1", N_FILES)
+        payloads = {p: os.urandom(FILE_BYTES) for p in paths}
+
+        plan = canned_plan(name, seed=seed)
+        collab.install_faults(plan)
+        for p, data in payloads.items():
+            res = alice.write(p, data)
+            assert getattr(res, "degraded", False), (
+                f"{name}: write to partitioned owner {p} was not degraded"
+            )
+            alice.tag(p, "matrix", name)
+        stats = alice.plane.resilience_stats()
+        assert stats["degraded_writes"] >= N_FILES, f"{name}: {stats}"
+        assert stats["leases"]["acquired"] >= 1, f"{name}: {stats}"
+        fired = plan.stats()
+        assert fired["blocked"] > 0, f"{name}: the partition never fired ({fired})"
+
+        collab.install_faults(None)
+        report = collab.reconcile("/shared")
+        assert report["converged"], f"{name}: reconcile did not converge ({report})"
+        rows = [d.metadata.path_digest("/shared")["rows"] for d in collab.dtns]
+        assert all(r == rows[0] for r in rows[1:]), f"{name}: shards diverge post-heal"
+        hits = bob.search(f"matrix = {name}")
+        assert {r["path"] for r in hits} == set(payloads), (
+            f"{name}: search returned {sorted(r['path'] for r in hits)}"
+        )
+        for p, data in payloads.items():
+            assert bob.read(p) == data, f"{name}: corrupt read-back for {p}"
+        return (
+            f"{sum(fired.values()):3d} faults "
+            f"(blocked {fired['blocked']} dup {fired['duplicated']} "
+            f"delay {fired['delayed']}), "
+            f"{stats['degraded_writes']} degraded writes, "
+            f"reconcile replayed {report['records_replayed']}"
+            f"+{report['index_records_replayed']}"
+        )
+    finally:
+        collab.stop_replication()
+
+
 def run_cell(name: str, seed: int) -> str:
+    if name in PARTITION_PLANS:
+        return run_partition_cell(name, seed)
     collab = _make_collab()
     alice = Workspace(collab, "alice", "dc0", extraction_mode="none", retry=RETRY)
     bob = Workspace(collab, "bob", "dc1", extraction_mode="none", retry=RETRY)

@@ -19,7 +19,8 @@ PYTHON="${PYTHON:-python}"
 # Baseline ratchet: PR 2 went fully green (seed v0 was 103/9/2), so any
 # failure — including re-breaking the 9 ported jax tests — is a regression.
 # PR 4 (data plane) added the datapath/backend suites: 197 -> 254.
-BASE_PASS=254
+# PR 9 (quorum/leases) added the lease + heal/breaker suites: 254 -> 290.
+BASE_PASS=290
 BASE_FAIL=0
 BASE_ERR=0
 

@@ -16,12 +16,15 @@ from repro.core.datapath import (
     DATA_LANES,
     STRIPE_BYTES,
 )
-from repro.core.plane import BREAKER_COOLDOWN_S, BREAKER_THRESHOLD
+from repro.core.cluster import REPLICA_N
+from repro.core.leases import DEFAULT_LEASE_TTL_S
+from repro.core.plane import BREAKER_COOLDOWN_S, BREAKER_THRESHOLD, WRITE_QUORUM
 from repro.core.query import SUMMARY_BITS
 from repro.core.replication import (
     COMPACT_WINDOW,
     PUMP_MAX_AGE_S,
     PUMP_MAX_PENDING,
+    RECONCILE_TIMEOUT_S,
     WB_MAX_AGE_S,
     WB_MAX_PENDING,
 )
@@ -100,8 +103,9 @@ class TestbedConfig:
     # - breaker_cooldown_s: how long an open breaker waits before admitting
     #   the single half-open probe
     # - fault_plan: name of a canned FaultPlan from core.faults.CANNED_PLANS
-    #   ("drops" | "flaky" | "crash" | "chaos"; "" = none) for fault-matrix
-    #   smoke runs — see benchmarks/fig13_faults.py for the how-to
+    #   ("drops" | "flaky" | "crash" | "chaos" | "quorum" | "lease-expiry";
+    #   "" = none) for fault-matrix smoke runs — see benchmarks/fig13_faults.py
+    #   and benchmarks/fig14_quorum.py for the how-to
     retry_enabled: bool = True
     retry_max_attempts: int = 4
     retry_base_s: float = 0.002
@@ -111,6 +115,21 @@ class TestbedConfig:
     breaker_threshold: int = BREAKER_THRESHOLD
     breaker_cooldown_s: float = BREAKER_COOLDOWN_S
     fault_plan: str = ""
+    # partition-tolerant write knobs (core/leases.py, plane.quorum_create,
+    # Collaboration.reconcile; honored by Workspace(write_quorum=...,
+    # lease_ttl_s=...)):
+    # - replica_n: size of a path's replica set (owner + ring successors) —
+    #   the membership leases are granted over and quorums counted against
+    # - write_quorum: members (coordinator included) that must durably apply
+    #   a degraded write before it is acknowledged
+    # - lease_ttl_s: per-prefix write-lease TTL; a holder renews at 25%
+    #   remaining, a successor's grant fences all older tokens out
+    # - reconcile_timeout_s: bound on one anti-entropy pass after heal
+    #   (Collaboration.reconcile(timeout_s=...))
+    replica_n: int = REPLICA_N
+    write_quorum: int = WRITE_QUORUM
+    lease_ttl_s: float = DEFAULT_LEASE_TTL_S
+    reconcile_timeout_s: float = RECONCILE_TIMEOUT_S
 
 
 TESTBED = TestbedConfig()

@@ -31,6 +31,15 @@ Layers (bottom-up):
   crashes, torn journal writes and link partitions at the RPC boundary;
   paired with :class:`~repro.core.rpc.RetryPolicy` (backoff + idempotency
   tokens), per-DTN circuit breakers, and degraded-mode replica failover.
+- :mod:`repro.core.leases`     — **partition-tolerant writes**: per-prefix
+  epoch-fenced write leases (:class:`LeaseTable` grants, client-side
+  :class:`LeaseManager` majority acquisition with sloppy-quorum fallback);
+  mutations issued under a lease carry its fencing token, so a superseded
+  holder is refused (:class:`~repro.core.rpc.RpcFenced`) before its write
+  can reach any replica log.  The plane's quorum-acknowledged degraded
+  write path and the heal-time :class:`AntiEntropyReconciler`
+  (``Collaboration.reconcile()``) complete the accept-now/reconcile-later
+  story.
 """
 
 from .backends import MemoryBackend, OWNER_XATTR, PosixBackend, StorageBackend, SYNC_XATTR
@@ -38,12 +47,21 @@ from .cluster import Collaboration, DataCenter, DTN
 from .datapath import ChunkCache, DataPath, TransferInterrupted
 from .discovery import AsyncIndexer, DiscoveryService, ExtractionMode
 from .faults import CANNED_PLANS, FaultPlan, TornWrite, canned_plan
+from .leases import (
+    Lease,
+    LeaseError,
+    LeaseHeldElsewhere,
+    LeaseManager,
+    LeaseTable,
+    LeaseUnavailable,
+)
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement, path_hash
 from .meu import MEU, ExportReport
 from .namespace import DEFAULT_NS, Namespace, NamespaceRegistry
 from .plane import AttrCache, CircuitBreaker, InvalidationBus, ServicePlane
 from .query import Query, QueryError, ScatterGatherPlan, parse_query, plan_query
 from .replication import (
+    AntiEntropyReconciler,
     EpochClock,
     ReplicaPump,
     ReplicationLog,
@@ -54,6 +72,7 @@ from .rpc import (
     RetryPolicy,
     RpcClient,
     RpcError,
+    RpcFenced,
     RpcFuture,
     RpcPipeline,
     RpcServer,
@@ -70,7 +89,7 @@ from .scidata import (
     serialize_scidata,
     write_scidata,
 )
-from .workspace import NativeSession, Workspace
+from .workspace import NativeSession, Workspace, WriteResult
 
 __all__ = [
     "MemoryBackend",
@@ -105,10 +124,17 @@ __all__ = [
     "CircuitBreaker",
     "InvalidationBus",
     "ServicePlane",
+    "AntiEntropyReconciler",
     "EpochClock",
     "ReplicaPump",
     "ReplicationLog",
     "WriteBackJournal",
+    "Lease",
+    "LeaseError",
+    "LeaseHeldElsewhere",
+    "LeaseManager",
+    "LeaseTable",
+    "LeaseUnavailable",
     "Query",
     "QueryError",
     "ScatterGatherPlan",
@@ -118,6 +144,7 @@ __all__ = [
     "RetryPolicy",
     "RpcClient",
     "RpcError",
+    "RpcFenced",
     "RpcFuture",
     "RpcPipeline",
     "RpcServer",
@@ -133,4 +160,5 @@ __all__ = [
     "write_scidata",
     "NativeSession",
     "Workspace",
+    "WriteResult",
 ]

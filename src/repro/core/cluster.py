@@ -20,13 +20,25 @@ from typing import Callable, Dict, List, Optional
 
 from .backends import MemoryBackend, PosixBackend, StorageBackend
 from .discovery import AsyncIndexer, DiscoveryService
+from .leases import LeaseTable
 from .metadata import DiscoveryShard, MetadataService, MetadataShard, hash_placement
 from .namespace import NamespaceRegistry
 from .plane import InvalidationBus
-from .replication import AppliedMap, EpochClock, ReplicaPump, ReplicationLog
+from .replication import (
+    RECONCILE_TIMEOUT_S,
+    AntiEntropyReconciler,
+    AppliedMap,
+    EpochClock,
+    ReplicaPump,
+    ReplicationLog,
+)
 from .rpc import Channel, RpcServer
 
-__all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy"]
+__all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy", "REPLICA_N"]
+
+#: default size of a path's replica set (owner + ring successors) — the N of
+#: "W of N" quorum writes; configs/scispace_testbed.py re-exports this
+REPLICA_N = 3
 
 
 class DTN:
@@ -61,10 +73,13 @@ class DTN:
         self.mutation_lock = threading.RLock()
         self.metadata_shard = MetadataShard(meta_db)
         self.discovery_shard = DiscoveryShard(disc_db)
+        #: write-lease grants + fence floors; shared by both RPC servers so a
+        #: single floor governs every mutating envelope this DTN admits
+        self.leases = LeaseTable(self.clock)
         self.metadata = MetadataService(
             self.metadata_shard, dtn_id=dtn_id, dc_id=dc_id,
             clock=self.clock, log=self.replication_log, applied=self.applied,
-            mutation_lock=self.mutation_lock,
+            mutation_lock=self.mutation_lock, leases=self.leases,
         )
         disc_kwargs: dict = {}
         if summary_bits is not None:
@@ -75,10 +90,12 @@ class DTN:
             mutation_lock=self.mutation_lock, **disc_kwargs,
         )
         self.metadata_server = RpcServer(
-            self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock, site=dc_id
+            self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock, site=dc_id,
+            fences=self.leases,
         )
         self.discovery_server = RpcServer(
-            self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock, site=dc_id
+            self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock, site=dc_id,
+            fences=self.leases,
         )
         self.async_indexer: Optional[AsyncIndexer] = None
         self.replica_pump: Optional[ReplicaPump] = None
@@ -204,6 +221,8 @@ class Collaboration:
         self.fault_plan = None
         #: why the last quiesce_replication returned False (diagnostics)
         self.quiesce_reason: Optional[str] = None
+        #: the last heal-time reconcile's report (see :meth:`reconcile`)
+        self.last_reconcile: Optional[Dict[str, object]] = None
         self._lock = threading.Lock()
 
     # -- construction -----------------------------------------------------------
@@ -242,6 +261,17 @@ class Collaboration:
     def owner_dtn(self, path: str) -> DTN:
         """The DTN whose shards own this pathname (hash placement, §III-B1)."""
         return self.dtns[hash_placement(path, len(self.dtns))]
+
+    def replica_set(self, path: str, n: int = REPLICA_N) -> List[int]:
+        """The DTN indices responsible for ``path``'s replicated writes: the
+        hash-placement owner plus its ring successors, ``min(n, total)``
+        members.  Leases are granted by a majority of this set; quorum
+        writes ack after W of its members hold the record durably."""
+        total = len(self.dtns)
+        if total == 0:
+            return []
+        owner = hash_placement(path, total)
+        return [(owner + k) % total for k in range(max(1, min(n, total)))]
 
     # -- namespace control (replicated to every metadata shard) ------------------
     def define_namespace(self, name: str, scope: str, owner: str, prefix: str):
@@ -327,10 +357,33 @@ class Collaboration:
         """Install (or, with ``None``, remove) a
         :class:`~repro.core.faults.FaultPlan`.  Clients consult the plan
         through a provider callable, so installation takes effect on the next
-        message — including planes and pumps built before this call."""
+        message — including planes and pumps built before this call.
+
+        ``install_faults(None)`` is a full *heal*: the outgoing plan's
+        pending timed restarts are cancelled (and plan-crashed DTNs brought
+        back up), its partitions lifted, and its rule cadence/schedule state
+        reset, so the collaboration behaves exactly like one that never had
+        the plan installed.  The plan's lifetime observability counters
+        (``stats()``) survive — they describe what *did* fire.
+        """
+        if plan is None and self.fault_plan is not None:
+            self.fault_plan.deactivate()
         if plan is not None:
             plan.bind(self)
         self.fault_plan = plan
+
+    # -- heal-time anti-entropy --------------------------------------------------
+    def reconcile(
+        self, prefix: str = "/", timeout_s: float = RECONCILE_TIMEOUT_S
+    ) -> Dict[str, object]:
+        """Run heal-time anti-entropy over ``prefix`` and return the report
+        (see :class:`~repro.core.replication.AntiEntropyReconciler`).  Call
+        after ``install_faults(None)`` heals a partition during which
+        degraded quorum writes were accepted."""
+        reconciler = AntiEntropyReconciler(self, prefix=prefix)
+        report = reconciler.run(timeout_s=timeout_s)
+        self.last_reconcile = report
+        return report
 
     # -- lifecycle ---------------------------------------------------------------
     def start_async_indexers(self, **kwargs) -> None:

@@ -493,6 +493,45 @@ class DiscoveryService:
         """Codec-safe applied-epoch map (origin dtn_id as str keys)."""
         return self.applied.snapshot()
 
+    # -- anti-entropy surface (heal-time reconciliation) ----------------------
+    def index_digest(self, prefix: str = "/") -> Dict[str, Dict[str, int]]:
+        """Per-(path, origin) index-version watermarks under ``prefix``.
+
+        ``{path: {origin: epoch}}`` (origins as str keys, codec-safe) — the
+        max epoch over the shard's rows merged with the replica-apply
+        bookkeeping (``_applied_index``), so a pair whose latest replacement
+        set was *empty* still reports the version a replica applied.
+        """
+        like = prefix.rstrip("/") + "/%"
+        out: Dict[str, Dict[str, int]] = {}
+        for path, origin, epoch in self.shard.execute(
+            "SELECT path, origin, MAX(epoch) FROM attributes"
+            " WHERE path=? OR path LIKE ? GROUP BY path, origin",
+            (prefix, like),
+        ):
+            out.setdefault(path, {})[str(int(origin))] = int(epoch)
+        with self._apply_lock:
+            applied = list(self._applied_index.items())
+        for (path, origin), epoch in applied:
+            if path != prefix and not path.startswith(prefix.rstrip("/") + "/"):
+                continue
+            cur = out.setdefault(path, {})
+            if int(epoch) > cur.get(str(int(origin)), 0):
+                cur[str(int(origin))] = int(epoch)
+        return out
+
+    def export_index_rows(self, path: str, origin: int) -> List[List[Any]]:
+        """One (path, origin) replacement set, in the replicated-record row
+        shape, for a heal-time diff replay."""
+        return [
+            list(r)
+            for r in self.shard.execute(
+                "SELECT attr_name, attr_type, value_int, value_real, value_text"
+                " FROM attributes WHERE path=? AND origin=?",
+                (path, int(origin)),
+            )
+        ]
+
     # -- async queue (Inline-ASync) ---------------------------------------------
     def enqueue_index(self, path: str, dc_id: str) -> bool:
         """The single small message the Inline-ASync write path sends."""

@@ -121,9 +121,18 @@ class FaultPlan:
         self._crash_at: Dict[int, List[float]] = {}
         #: append ordinal -> fraction of the record that reaches disk
         self._torn: Dict[int, float] = {}
+        # configured (as-built) copies of the above: deactivate() restores
+        # runtime state from these, so a healed plan re-installs as fresh
+        self._partition_spec: set = set()
+        self._crash_spec: Dict[int, List[float]] = {}
+        self._torn_spec: Dict[int, float] = {}
         self._collab: Any = None
         self._served: Dict[int, int] = {}
         self._journal_appends = 0
+        #: pending timed restarts armed by _trigger_crash (heal cancels them)
+        self._timers: List[threading.Timer] = []
+        #: DTNs this plan crashed (heal restarts any still down)
+        self._crashed_by_plan: set = set()
         # observability: what actually fired
         self.dropped = 0
         self.dropped_replies = 0
@@ -160,8 +169,10 @@ class FaultPlan:
         """Block the link between DCs ``a`` and ``b`` while both stay up."""
         with self._lock:
             self._partitions.add((a, b))
+            self._partition_spec.add((a, b))
             if symmetric:
                 self._partitions.add((b, a))
+                self._partition_spec.add((b, a))
         return self
 
     def heal(self, a: Optional[str] = None, b: Optional[str] = None) -> "FaultPlan":
@@ -182,12 +193,14 @@ class FaultPlan:
         outage, so retrying clients ride through a bounded failure window.
         """
         self._crash_at[dtn_id] = [nth, restart_after_s]
+        self._crash_spec[dtn_id] = [nth, restart_after_s]
         return self
 
     def torn_journal_append(self, nth: int, keep_fraction: float = 0.5) -> "FaultPlan":
         """Tear the ``nth`` journal append (0-based): only ``keep_fraction``
         of the record's bytes reach the disk before the write fails."""
         self._torn[nth] = keep_fraction
+        self._torn_spec[nth] = keep_fraction
         return self
 
     def bind(self, collab: Any) -> "FaultPlan":
@@ -257,11 +270,48 @@ class FaultPlan:
         collab = self._collab
         if collab is None:
             return
+        with self._lock:
+            self._crashed_by_plan.add(dtn_id)
         collab.crash_dtn(dtn_id)
         if restart_after_s > 0:
             timer = threading.Timer(restart_after_s, collab.restart_dtn, args=(dtn_id,))
             timer.daemon = True
+            with self._lock:
+                self._timers.append(timer)
             timer.start()
+
+    def deactivate(self) -> None:
+        """Heal completely (``Collaboration.install_faults(None)`` calls this).
+
+        Cancels pending ``crash_dtn_at_call`` timed restarts and restarts any
+        DTN this plan crashed that is still down, lifts every partition, and
+        resets all *schedule* state — rule matched/fired cadence counters,
+        per-DTN served counts, crash triggers, torn appends, the journal
+        ordinal — back to the plan's as-built configuration, so a healed
+        collaboration is indistinguishable from one that never had the plan:
+        re-installing this plan starts its cadence from zero with every
+        configured fault re-armed.  The lifetime observability totals
+        (:meth:`stats`) are deliberately preserved; they record history, not
+        pending behavior.
+        """
+        with self._lock:
+            timers, self._timers = self._timers, []
+            crashed, self._crashed_by_plan = self._crashed_by_plan, set()
+            self._partitions = set(self._partition_spec)
+            self._crash_at = {k: list(v) for k, v in self._crash_spec.items()}
+            self._torn = dict(self._torn_spec)
+            self._served.clear()
+            self._journal_appends = 0
+            for rule in self._rules:
+                rule.matched = 0
+                rule.fired = 0
+            collab = self._collab
+        for timer in timers:
+            timer.cancel()
+        if collab is not None:
+            for dtn_id in sorted(crashed):
+                if collab.dtns[dtn_id].down:
+                    collab.restart_dtn(dtn_id)
 
     def journal_torn_bytes(self, append_ordinal: int, frame_len: int) -> Optional[int]:
         """Torn-write hook for :class:`WriteBackJournal.append`: returns how
@@ -333,11 +383,35 @@ def _plan_chaos(seed: int) -> FaultPlan:
     )
 
 
+def _plan_quorum(seed: int) -> FaultPlan:
+    """Clean inter-DC partition: the quorum/degraded-write acceptance cell.
+
+    Writes owned by the far DC must keep landing (journal + quorum of the
+    local replica set) while the link is down, then converge byte-identically
+    after ``install_faults(None)`` + ``Collaboration.reconcile()``.
+    """
+    return FaultPlan(seed).partition("dc0", "dc1")
+
+
+def _plan_lease_expiry(seed: int) -> FaultPlan:
+    """Partition plus a noisy link: exercises lease renewal under duplicate
+    deliveries and jitter, so an expired/superseded lease's fencing token is
+    actually refused (``RpcFenced``) rather than silently retried."""
+    return (
+        FaultPlan(seed)
+        .partition("dc0", "dc1")
+        .duplicate(every=9)
+        .delay(extra_s=0.0002, p=0.1)
+    )
+
+
 CANNED_PLANS = {
     "drops": _plan_drops,
     "flaky": _plan_flaky,
     "crash": _plan_crash,
     "chaos": _plan_chaos,
+    "quorum": _plan_quorum,
+    "lease-expiry": _plan_lease_expiry,
 }
 
 

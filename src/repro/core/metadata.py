@@ -206,12 +206,16 @@ class MetadataService:
         log: Optional[ReplicationLog] = None,
         applied: Optional[AppliedMap] = None,
         mutation_lock: Optional[threading.RLock] = None,
+        leases: Optional[Any] = None,
     ):
         self.shard = shard
         self.dtn_id = dtn_id
         self.dc_id = dc_id
         self.clock = clock if clock is not None else EpochClock()
         self.log = log
+        #: this DTN's LeaseTable (fence-floor authority); the lease_* methods
+        #: below are its RPC surface so LeaseManagers can collect grants
+        self.leases = leases
         #: per-origin applied watermark, shared DTN-wide with discovery
         self.applied = applied if applied is not None else AppliedMap()
         #: serializes tick -> mutate -> log across BOTH services of the DTN,
@@ -472,6 +476,53 @@ class MetadataService:
                     )
                     applied += 1
         return applied
+
+    # -- write leases (delegated to the DTN's LeaseTable) ---------------------
+    def lease_grant(self, prefix: str, holder: str, ttl_s: float) -> Dict[str, Any]:
+        if self.leases is None:
+            raise RuntimeError("this DTN has no lease table")
+        return self.leases.grant(prefix, holder, float(ttl_s))
+
+    def lease_renew(self, prefix: str, holder: str, token: int, ttl_s: float) -> bool:
+        if self.leases is None:
+            raise RuntimeError("this DTN has no lease table")
+        return self.leases.renew(prefix, holder, int(token), float(ttl_s))
+
+    def lease_release(self, prefix: str, holder: str, token: int) -> bool:
+        if self.leases is None:
+            raise RuntimeError("this DTN has no lease table")
+        return self.leases.release(prefix, holder, int(token))
+
+    # -- anti-entropy surface (heal-time reconciliation) ----------------------
+    def path_digest(self, prefix: str = "/") -> Dict[str, Any]:
+        """Per-path (epoch, origin) watermarks under ``prefix``, plus live
+        tombstones — the digest two sides exchange after a heal to find rows
+        on which they diverge without shipping the rows themselves."""
+        rows = self.shard.execute(
+            "SELECT path, epoch, origin FROM files WHERE path=? OR path LIKE ?",
+            (prefix, prefix.rstrip("/") + "/%"),
+        )
+        with self._apply_lock:
+            tombs = {
+                p: [int(e), int(o)]
+                for p, (e, o) in self._tombstones.items()
+                if p == prefix or p.startswith(prefix.rstrip("/") + "/")
+            }
+        return {
+            "rows": {p: [int(e), int(o)] for p, e, o in rows},
+            "tombs": tombs,
+        }
+
+    def export_entries(self, paths: List[str]) -> List[Dict[str, Any]]:
+        """Full rows for a diff replay: byte-identical apply on the far side."""
+        out = []
+        for path in paths:
+            rows = self.shard.execute(
+                f"SELECT {','.join(_FILE_COLS)} FROM files WHERE path=?", (path,)
+            )
+            if rows:
+                out.append(_row_to_entry(rows[0]))
+        return out
 
     def getattr_replica(self, path: str, origin: int) -> Dict[str, Any]:
         """Replica-role read: the local row plus this shard's applied

@@ -41,22 +41,32 @@ import time
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from itertools import count
+
+from .leases import DEFAULT_LEASE_TTL_S, Lease, LeaseManager
 from .metadata import hash_placement, path_hash
 from .query import ShardSummary
 from .replication import WB_MAX_AGE_S, WB_MAX_PENDING, WriteBackJournal
-from .rpc import RetryPolicy, RpcClient, RpcError, RpcUnavailable
+from .rpc import RetryPolicy, RpcClient, RpcError, RpcFenced, RpcUnavailable
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->plane cycle
     from .cluster import Collaboration
 
-__all__ = ["AttrCache", "CircuitBreaker", "InvalidationBus", "ServicePlane"]
+__all__ = ["AttrCache", "CircuitBreaker", "InvalidationBus", "ServicePlane", "WRITE_QUORUM"]
 
 #: Circuit-breaker defaults (overridable per plane / per workspace).
 BREAKER_THRESHOLD = 3
 BREAKER_COOLDOWN_S = 0.25
 
+#: How many replica-set members must durably apply a degraded write before
+#: it is acknowledged (the coordinator's own apply counts as one).
+WRITE_QUORUM = 2
+
 #: Sentinel distinguishing "not cached" from a cached ``None``.
 _MISS = object()
+
+#: distinguishes lease holders across planes in one process (tests, benches)
+_holder_seq = count()
 
 
 class InvalidationBus:
@@ -307,6 +317,8 @@ class ServicePlane:
         breaker_threshold: int = BREAKER_THRESHOLD,
         breaker_cooldown_s: float = BREAKER_COOLDOWN_S,
         failover: bool = True,
+        write_quorum: int = WRITE_QUORUM,
+        lease_ttl_s: float = DEFAULT_LEASE_TTL_S,
     ):
         self.collab = collab
         self.home_dc = home_dc
@@ -367,6 +379,22 @@ class ServicePlane:
         self.degraded_reads = 0
         self.stale_serves = 0
         self.breaker_skips = 0
+        #: partition-tolerant writes (ISSUE 9): mutations accepted while the
+        #: owner is unreachable, acknowledged only after ``write_quorum``
+        #: replica-set members (coordinator included) durably applied them
+        self.write_quorum = max(1, write_quorum)
+        self.degraded_writes = 0
+        self.quorum_acks = 0
+        #: per-prefix epoch-fenced write leases; mutations issued under a
+        #: lease carry its fencing token so a superseded holder is refused
+        #: (RpcFenced) before the write can reach any replica log
+        self.lease_manager = LeaseManager(
+            holder=f"{home_dc}/plane{next(_holder_seq)}",
+            replica_set=lambda prefix: collab.replica_set(prefix),
+            stand_ins=self._ring_rest,
+            call=lambda idx, method, **kw: self.guarded_call("meta", idx, method, **kw),
+            ttl_s=lease_ttl_s,
+        )
         #: shard-pruning summary cache: dtn_idx -> (epoch, cached_at, summary).
         #: The authoritative pruning source is :meth:`note_summaries_bulk` —
         #: one query-time RPC to a local replica whose filters the
@@ -464,6 +492,156 @@ class ServicePlane:
             raise
         breaker.success()
         return result
+
+    def fenced_call(
+        self, service: str, dtn_idx: int, fence: Dict[str, Any], method: str, **kwargs: Any
+    ) -> Any:
+        """:meth:`guarded_call` with a lease's fencing token on the envelope.
+
+        The receiving DTN admits the call only if ``fence["token"]`` is at or
+        above its fence floor for the prefix (:class:`~repro.core.leases.LeaseTable`);
+        a superseded holder gets :class:`~repro.core.rpc.RpcFenced` — which
+        counts as breaker *success* (the peer answered) and is never retried.
+        """
+        self._breaker_check(dtn_idx)
+        breaker = self.breakers[dtn_idx]
+        try:
+            result = self._clients(service)[dtn_idx].call_fenced(fence, method, **kwargs)
+        except RpcUnavailable:
+            breaker.failure()
+            raise
+        except RpcError:  # includes RpcFenced: an answer, not an outage
+            breaker.success()
+            raise
+        breaker.success()
+        return result
+
+    # -- partition-tolerant (quorum-acknowledged) mutations ---------------------
+    def write_lease(self, prefix: str) -> Lease:
+        """A live epoch-fenced write lease on ``prefix`` (acquire/renew)."""
+        return self.lease_manager.hold(prefix)
+
+    def _ring_rest(self, prefix: str) -> List[int]:
+        """Ring successors beyond the prefix's replica set — the hinted
+        stand-in extension of the preference list (Dynamo-style)."""
+        total = len(self.collab.dtns)
+        members = set(self.collab.replica_set(prefix))
+        owner = hash_placement(prefix, total)
+        return [
+            (owner + k) % total
+            for k in range(total)
+            if (owner + k) % total not in members
+        ]
+
+    def _quorum_targets(self, prefix: str, lease: Lease) -> List[int]:
+        """Candidate appliers for a degraded write, most-preferred first.
+
+        The lease's *grant set* leads: those DTNs minted/witnessed the
+        lease's token, so their fence floors are raised — a stale holder is
+        refused at the first contact.  The remaining replica-set members and
+        ring stand-ins follow for quorum top-up under partial faults.
+        """
+        members = self.collab.replica_set(prefix)
+        granted = list(lease.grants)
+        rest = [i for i in members if i not in granted] + [
+            i for i in self._ring_rest(prefix) if i not in granted
+        ]
+        return granted + rest
+
+    def quorum_create(
+        self, path: str, create_kwargs: Dict[str, Any], *, prefix: Optional[str] = None
+    ) -> Dict[str, Any]:
+        """Accept a ``create`` while the path's owner is unreachable.
+
+        The partition-tolerant write path (ISSUE 9): acquire the prefix's
+        epoch-fenced lease, journal the intent (fsync-before-ack when the
+        journal is on disk), have a reachable *coordinator* perform the
+        create in origin role — it ticks its own clock and appends to its
+        own replication log, so the record converges everywhere (including
+        the healed owner) through the ordinary pump — then push the stamped
+        row directly to further targets until ``write_quorum`` members have
+        durably applied it.  Only then is the intent acknowledged
+        (``journal.ack``).  Every RPC carries the lease's fencing token: a
+        stale holder is refused (:class:`~repro.core.rpc.RpcFenced`) before
+        its write can touch any service or replication log.
+
+        Raises :class:`~repro.core.leases.LeaseUnavailable` /
+        :class:`LeaseHeldElsewhere` when no lease can be held, and
+        :class:`RpcUnavailable` when fewer than ``write_quorum`` targets are
+        reachable — an unacknowledged write (the journal keeps the intent).
+        """
+        prefix = prefix if prefix is not None else (path.rsplit("/", 1)[0] or "/")
+        lease = self.write_lease(prefix)
+        fence = lease.fence()
+        journal_kw = {
+            k: create_kwargs[k] for k in ("size", "sync") if k in create_kwargs
+        }
+        self.journal.append(
+            path, journal_kw, epoch=self.seen_epoch(self.owner(path))
+        )
+        self._journal_fences.pop(path, None)
+        targets = self._quorum_targets(prefix, lease)
+        entry: Optional[Dict[str, Any]] = None
+        coordinator: Optional[int] = None
+        for idx in targets:
+            try:
+                entry = self.fenced_call("meta", idx, fence, "create", **create_kwargs)
+                coordinator = idx
+                break
+            except RpcFenced:
+                self.journal.ack(path)  # refused, not lost: drop the intent
+                raise
+            except RpcUnavailable:
+                continue
+        if entry is None or coordinator is None:
+            self.journal.ack(path)  # nothing was created anywhere
+            raise RpcUnavailable(
+                f"degraded create {path!r}: no replica-set member reachable"
+            )
+        record = {
+            "service": "meta",
+            "op": "upsert",
+            "entries": [dict(entry)],
+            "epoch": int(entry["epoch"]),
+            "origin": int(entry["origin"]),
+            # wm=0: a direct push must not inflate the target's applied
+            # watermark for the coordinator — the pump still owes history
+            "wm": 0,
+        }
+        acks = 1  # the coordinator's own durable apply
+        for idx in targets:
+            if acks >= self.write_quorum:
+                break
+            if idx == coordinator:
+                continue
+            try:
+                self.fenced_call(
+                    "meta", idx, fence, "apply_replicated", records=[dict(record)]
+                )
+            except RpcFenced:
+                raise
+            except RpcUnavailable:
+                continue
+            acks += 1
+        if acks < self.write_quorum:
+            # NOT acknowledged: the journal keeps the intent, the coordinator's
+            # log will still converge the partial state, and the caller may
+            # retry (idempotency tokens make the retry exactly-once)
+            raise RpcUnavailable(
+                f"degraded create {path!r}: {acks}/{self.write_quorum} quorum acks"
+            )
+        self.journal.ack(path)
+        self.degraded_writes += 1
+        self.quorum_acks += acks
+        return {
+            "entry": entry,
+            "acks": acks,
+            "quorum": self.write_quorum,
+            "coordinator": coordinator,
+            "degraded": True,
+            "lease_degraded": lease.degraded,
+            "token": lease.token,
+        }
 
     # -- scatter-gather --------------------------------------------------------
     def _pay_windows(self, delays: List[float]) -> None:
@@ -823,13 +1001,34 @@ class ServicePlane:
 
     # -- accounting / lifecycle -------------------------------------------------
     def resilience_stats(self) -> Dict[str, Any]:
-        """Fault-plane accounting: degraded serves, breaker activity."""
+        """Fault-plane accounting: degraded serves, breaker activity, retry
+        budget exhaustion, server-side dedup pressure, and the quorum/lease
+        write path."""
+        dtns = self.collab.dtns
         return {
             "degraded_reads": self.degraded_reads,
             "stale_serves": self.stale_serves,
             "breaker_skips": self.breaker_skips,
             "breakers_opened": sum(b.opened for b in self.breakers),
             "breaker_states": [b.state for b in self.breakers],
+            # give-ups caused specifically by an exhausted shared retry budget
+            # (not per-call attempts) — distinguishes "the budget starved us"
+            # from "the peer was just down"
+            "budget_exhausted": sum(c.stats.budget_exhausted for c in self.clients()),
+            # server-side idempotency-window evictions: >0 means replies were
+            # aged out and a late retry could re-execute — the knob to watch
+            # when sizing dedup_window
+            "dedup_evictions": sum(
+                dtn.metadata_server.dedup_evictions + dtn.discovery_server.dedup_evictions
+                for dtn in dtns
+            ),
+            "fenced_rejections": sum(
+                dtn.metadata_server.fenced_rejections + dtn.discovery_server.fenced_rejections
+                for dtn in dtns
+            ),
+            "degraded_writes": self.degraded_writes,
+            "quorum_acks": self.quorum_acks,
+            "leases": self.lease_manager.stats(),
         }
 
     def rpc_stats(self) -> Dict[str, float]:
@@ -853,6 +1052,10 @@ class ServicePlane:
         if self._closed:
             return
         self._closed = True
+        try:
+            self.lease_manager.release_all()
+        except RpcError:
+            pass  # unreleased leases simply expire at their TTL
         try:
             self.flush()
         except RpcError:

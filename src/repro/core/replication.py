@@ -56,6 +56,7 @@ if TYPE_CHECKING:  # pragma: no cover - type-only imports
     from .cluster import Collaboration, DTN
 
 __all__ = [
+    "AntiEntropyReconciler",
     "AppliedMap",
     "AdaptiveBatcher",
     "EpochClock",
@@ -68,6 +69,8 @@ __all__ = [
     "PUMP_MAX_PENDING",
     "PUMP_MAX_AGE_S",
     "COMPACT_WINDOW",
+    "RECONCILE_PREFIX",
+    "RECONCILE_TIMEOUT_S",
 ]
 
 #: write-back journal flush thresholds (mirroring AsyncIndexer's defaults;
@@ -79,6 +82,11 @@ PUMP_MAX_PENDING = 64
 PUMP_MAX_AGE_S = 0.05
 #: max raw records one drain coalesces per peer (the compaction window)
 COMPACT_WINDOW = 512
+#: anti-entropy defaults (configs/scispace_testbed.py re-exports these):
+#: namespace subtree a heal-time reconcile sweeps, and how long it may wait
+#: for the pumps to quiesce before digest exchange
+RECONCILE_PREFIX = "/"
+RECONCILE_TIMEOUT_S = 10.0
 
 
 class EpochClock:
@@ -728,6 +736,20 @@ class WriteBackJournal:
         with self._lock:
             return {p: dict(kw) for p, kw in self._pending.items()}
 
+    def ack(self, path: str) -> None:
+        """One path's record is quorum-durable: drop it from the pending
+        buffer so :meth:`should_flush`/:meth:`pending` stop counting it.
+
+        The on-disk frame is left in place until the next :meth:`mark_flushed`
+        truncation — a crash-recovery replay of an already-applied record is
+        harmless (updates are idempotent and ``fence_epoch``-guarded), and
+        never rewriting the file here keeps the append path fsync-only.
+        """
+        with self._lock:
+            self._pending.pop(path, None)
+            if not self._pending:
+                self._first_dirty_t = None
+
     def mark_flushed(self) -> None:
         """The buffered updates reached their origin DTNs; reset durably."""
         with self._lock:
@@ -800,3 +822,160 @@ class WriteBackJournal:
             if self._fh is not None:
                 self._fh.close()
                 self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# Heal-time anti-entropy
+# ---------------------------------------------------------------------------
+
+
+class AntiEntropyReconciler:
+    """Digest-exchange reconciliation after a partition heals.
+
+    The pumps already replay everything both sides *logged* once the link is
+    back (cursors are held, not reset), so the first phase is simply a
+    quiesce.  What the pumps cannot see is state divergence with no pending
+    log delta — records lost to a crashed log tail, or rows applied through
+    the quorum push path on one side only.  For those, every live DTN
+    exchanges **per-path watermark digests** (``MetadataService.path_digest``
+    / ``DiscoveryService.index_digest``: just (epoch, origin) stamps, no
+    rows), the global winner per path is chosen by (epoch, origin)
+    last-writer-wins — fencing-token priority is inherent, because fence
+    tokens and mutation epochs are minted from the same Lamport clocks, so a
+    successor lease's writes always carry larger epochs than the fenced-out
+    holder's — and only the diff is replayed, both ways, through the same
+    idempotent ``apply_replicated`` surfaces the pumps use (with ``wm=0`` so
+    a targeted replay never inflates a replica's applied watermark).
+
+    :meth:`reconcile_report` summarizes what converged: paths checked/
+    converged, conflicts resolved (paths where ≥2 distinct stamps were
+    live), and records replayed per service.
+    """
+
+    def __init__(self, collab: "Collaboration", prefix: str = RECONCILE_PREFIX):
+        self.collab = collab
+        self.prefix = prefix
+        self._report: Dict[str, Any] = {"ran": False}
+
+    # -- helpers ---------------------------------------------------------------
+    def _covers(self, tomb_path: str, path: str) -> bool:
+        return path == tomb_path or path.startswith(tomb_path.rstrip("/") + "/")
+
+    def _live_dtns(self) -> List["DTN"]:
+        return [d for d in self.collab.dtns if not d.down]
+
+    # -- the sweep -------------------------------------------------------------
+    def run(self, timeout_s: float = RECONCILE_TIMEOUT_S) -> Dict[str, Any]:
+        collab = self.collab
+        report: Dict[str, Any] = {
+            "ran": True,
+            "prefix": self.prefix,
+            "pump_quiesced": True,
+            "paths_checked": 0,
+            "paths_converged": 0,
+            "conflicts_resolved": 0,
+            "records_replayed": 0,
+            "index_records_replayed": 0,
+            "converged": False,
+        }
+        # phase 0: pump-driven bidirectional replay of everything logged
+        if collab.replication_enabled:
+            report["pump_quiesced"] = collab.quiesce_replication(timeout_s=timeout_s)
+        live = self._live_dtns()
+        if len(live) < 2:
+            report["converged"] = True
+            report["ran"] = bool(live)
+            self._report = report
+            return report
+
+        # phase 1: metadata digest exchange + diff replay
+        digests = {d.dtn_id: d.metadata.path_digest(self.prefix) for d in live}
+        # global tombstone view: max stamp per tombstoned path
+        tombs: Dict[str, Tuple[int, int]] = {}
+        for dig in digests.values():
+            for path, stamp in dig["tombs"].items():
+                if tuple(stamp) > tombs.get(path, (0, 0)):
+                    tombs[path] = (int(stamp[0]), int(stamp[1]))
+        all_paths = sorted({p for dig in digests.values() for p in dig["rows"]})
+        report["paths_checked"] = len(all_paths)
+        for path, stamp in tombs.items():
+            # spread the tombstone itself to DTNs that never saw the unlink
+            record = {
+                "service": "meta", "op": "unlink", "path": path,
+                "epoch": stamp[0], "origin": stamp[1], "wm": 0,
+            }
+            for dtn in live:
+                if tuple(digests[dtn.dtn_id]["tombs"].get(path, (0, 0))) != stamp:
+                    dtn.metadata.apply_replicated([dict(record)])
+                    report["records_replayed"] += 1
+        for path in all_paths:
+            stamps = {
+                d.dtn_id: tuple(digests[d.dtn_id]["rows"].get(path, (0, 0)))
+                for d in live
+            }
+            present = {s for s in stamps.values() if s != (0, 0)}
+            winner = max(present)
+            # a covering subtree tombstone newer than the winning row deletes
+            # the path everywhere; the tombstone replay above already did that
+            dead = any(
+                self._covers(tp, path) and ts >= winner for tp, ts in tombs.items()
+            )
+            if len(present) > 1:
+                report["conflicts_resolved"] += 1
+            if dead:
+                continue
+            holder = next(d for d in live if stamps[d.dtn_id] == winner)
+            entries = holder.metadata.export_entries([path])
+            if not entries:
+                continue
+            record = {
+                "service": "meta", "op": "upsert", "entries": entries,
+                "epoch": winner[0], "origin": winner[1], "wm": 0,
+            }
+            for dtn in live:
+                if stamps[dtn.dtn_id] != winner:
+                    dtn.metadata.apply_replicated([dict(record)])
+                    report["records_replayed"] += 1
+
+        # phase 2: discovery-index digest exchange + replacement-set replay
+        idx_digests = {d.dtn_id: d.discovery.index_digest(self.prefix) for d in live}
+        pairs: Dict[Tuple[str, int], int] = {}
+        for dig in idx_digests.values():
+            for path, by_origin in dig.items():
+                for origin, epoch in by_origin.items():
+                    key = (path, int(origin))
+                    if int(epoch) > pairs.get(key, 0):
+                        pairs[key] = int(epoch)
+        for (path, origin), epoch in sorted(pairs.items()):
+            holder = next(
+                d for d in live
+                if idx_digests[d.dtn_id].get(path, {}).get(str(origin), 0) == epoch
+            )
+            rows = holder.discovery.export_index_rows(path, origin)
+            record = {
+                "service": "sds", "op": "index", "path": path, "rows": rows,
+                "epoch": epoch, "origin": origin, "wm": 0,
+            }
+            for dtn in live:
+                if dtn.dtn_id == origin:
+                    continue  # a DTN's own-origin rows are authoritative
+                if idx_digests[dtn.dtn_id].get(path, {}).get(str(origin), 0) != epoch:
+                    dtn.discovery.apply_replicated_index([dict(record)])
+                    report["index_records_replayed"] += 1
+
+        # phase 3: verify — recompute digests, demand byte-level agreement
+        final = [d.metadata.path_digest(self.prefix) for d in live]
+        final_idx = [d.discovery.index_digest(self.prefix) for d in live]
+        rows_agree = all(f["rows"] == final[0]["rows"] for f in final[1:])
+        idx_agree = all(f == final_idx[0] for f in final_idx[1:])
+        report["paths_converged"] = sum(
+            1 for path in all_paths
+            if len({tuple(f["rows"].get(path, (0, 0))) for f in final}) == 1
+        )
+        report["converged"] = rows_agree and idx_agree
+        self._report = report
+        return report
+
+    def reconcile_report(self) -> Dict[str, Any]:
+        """The last :meth:`run`'s summary (``{"ran": False}`` before any)."""
+        return dict(self._report)

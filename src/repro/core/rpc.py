@@ -75,6 +75,7 @@ __all__ = [
     "CodecError",
     "RpcUnavailable",
     "RpcTimeout",
+    "RpcFenced",
     "RetryPolicy",
     "RpcFuture",
     "RpcPipeline",
@@ -167,6 +168,17 @@ class RpcUnavailable(RpcError):
 
 class RpcTimeout(RpcUnavailable):
     """A message (request or reply) was lost and the call timed out waiting."""
+
+
+class RpcFenced(RpcError):
+    """The request's fencing token is stale: a newer write lease exists for
+    the path prefix, so the server refused to dispatch the mutation.
+
+    Deliberately *not* an :class:`RpcUnavailable` — the peer answered, it
+    just said no.  Retrying with the same token can never succeed (fence
+    floors only rise), so retry policies must not ride through this; the
+    holder has to re-acquire its lease and mint a fresh token.
+    """
 
 
 class CodecError(RpcError, ValueError):
@@ -586,6 +598,10 @@ class RpcStats:
     timeouts: int = 0
     #: calls that failed with unavailability after exhausting the policy
     failures: int = 0
+    #: failures where the per-client retry *budget* (not attempts/deadline)
+    #: was the bound that tripped — the signal a peer is melting down faster
+    #: than the schedule can absorb
+    budget_exhausted: int = 0
 
     def snapshot(self) -> Dict[str, float]:
         return {
@@ -598,6 +614,7 @@ class RpcStats:
             "retries": self.retries,
             "timeouts": self.timeouts,
             "failures": self.failures,
+            "budget_exhausted": self.budget_exhausted,
         }
 
 
@@ -616,7 +633,17 @@ class RpcServer:
     LRU window of ``rid -> packed reply``: a duplicate delivery — a network
     dup, or a retry whose original executed but whose reply was lost —
     returns the cached reply bytes without re-dispatching, so retried
-    mutations apply exactly once.  ``deduped`` counts suppressed replays.
+    mutations apply exactly once.  ``deduped`` counts suppressed replays;
+    ``dedup_evictions`` counts rids aged out of the window (an eviction
+    narrows the exactly-once guarantee for very late replays).
+
+    Requests carrying a ``fence`` field (``{"prefix", "token"}``, attached
+    by lease holders) are admitted through ``fences`` (the DTN's
+    :class:`~repro.core.leases.LeaseTable`): a token below the prefix's
+    fence floor means a newer lease was granted since this holder's, so the
+    mutation is refused *before* dispatch — it never reaches the service or
+    the replication log.  The fenced refusal is still rid-cached so a
+    retried stale mutation is refused, not re-evaluated.
     """
 
     def __init__(
@@ -627,6 +654,7 @@ class RpcServer:
         *,
         site: str = "",
         dedup_window: int = 1024,
+        fences: Any = None,
     ):
         self._service = service
         self.name = name
@@ -636,6 +664,10 @@ class RpcServer:
         self.site = site
         self.dedup_window = dedup_window
         self.deduped = 0
+        self.dedup_evictions = 0
+        #: fence-floor authority (LeaseTable) shared by this DTN's servers
+        self.fences = fences
+        self.fenced_rejections = 0
         self._dedup: "OrderedDict[str, bytes]" = OrderedDict()
         self._lock = threading.Lock()
 
@@ -656,6 +688,29 @@ class RpcServer:
                 return cached
         if self.clock is not None and req.get("epoch"):
             self.clock.observe(int(req["epoch"]))
+        fence = req.get("fence")
+        if fence is not None and self.fences is not None and not self.fences.admit(
+            str(fence.get("prefix", "/")), int(fence.get("token", 0))
+        ):
+            self.fenced_rejections += 1
+            reply = {
+                "ok": False,
+                "fenced": True,
+                "error": (
+                    f"FencedWrite: token {fence.get('token')} below fence floor "
+                    f"for {fence.get('prefix')!r} (a newer lease was granted)"
+                ),
+            }
+            if self.clock is not None:
+                reply["epoch"] = self.clock.last_local()
+            out = pack(reply)
+            if rid is not None:
+                with self._lock:
+                    self._dedup[rid] = out
+                    while len(self._dedup) > self.dedup_window:
+                        self._dedup.popitem(last=False)
+                        self.dedup_evictions += 1
+            return out
         if "batch" in req:
             # One channel round-trip, N operations, executed strictly in list
             # order on this server.  Each op gets its own ok/error slot so one
@@ -673,6 +728,7 @@ class RpcServer:
                 self._dedup[rid] = out
                 while len(self._dedup) > self.dedup_window:
                     self._dedup.popitem(last=False)
+                    self.dedup_evictions += 1
         return out
 
     def _dispatch(self, req: Dict[str, Any]) -> Dict[str, Any]:
@@ -866,12 +922,15 @@ class RpcClient:
                     backoff = min(
                         policy.cap_s, self._retry_rng.uniform(policy.base_s, backoff * 3)
                     )
+                    out_of_budget = self._retry_budget <= 0
                     if (
                         attempt >= policy.max_attempts
-                        or self._retry_budget <= 0
+                        or out_of_budget
                         or time.perf_counter() + backoff > deadline
                     ):
                         self.stats.failures += 1
+                        if out_of_budget:
+                            self.stats.budget_exhausted += 1
                         raise
                     attempt += 1
                     self._retry_budget -= 1
@@ -895,6 +954,24 @@ class RpcClient:
     def call(self, method: str, **kwargs: Any) -> Any:
         resp, _ = self._round_trip({"method": method, "kwargs": kwargs}, n_ops=1)
         if not resp.get("ok"):
+            if resp.get("fenced"):
+                raise RpcFenced(resp.get("error", "stale fencing token"))
+            raise RpcError(resp.get("error", "unknown remote error"))
+        return resp.get("result")
+
+    def call_fenced(self, fence: Dict[str, Any], method: str, **kwargs: Any) -> Any:
+        """:meth:`call` with a fencing token on the envelope.
+
+        ``fence`` is ``{"prefix": str, "token": int}`` from a held write
+        lease; the server refuses dispatch with :class:`RpcFenced` when the
+        token is below the prefix's fence floor (a newer lease exists).
+        """
+        resp, _ = self._round_trip(
+            {"method": method, "kwargs": kwargs, "fence": dict(fence)}, n_ops=1
+        )
+        if not resp.get("ok"):
+            if resp.get("fenced"):
+                raise RpcFenced(resp.get("error", "stale fencing token"))
             raise RpcError(resp.get("error", "unknown remote error"))
         return resp.get("result")
 
@@ -905,6 +982,8 @@ class RpcClient:
             {"method": method, "kwargs": kwargs}, n_ops=1, defer_wire=True
         )
         if not resp.get("ok"):
+            if resp.get("fenced"):
+                raise RpcFenced(resp.get("error", "stale fencing token"))
             raise RpcError(resp.get("error", "unknown remote error"))
         return resp.get("result"), wire
 

@@ -66,7 +66,33 @@ from .scidata import (
     write_scidata as _write_scidata_backend,
 )
 
-__all__ = ["Workspace", "NativeSession"]
+__all__ = ["Workspace", "NativeSession", "WriteResult"]
+
+
+class WriteResult(int):
+    """A :meth:`Workspace.write` return value that stays an ``int`` (bytes
+    written — every existing caller keeps working) while flagging how the
+    write was accepted.  ``degraded`` marks a partition-accepted write: the
+    owner was unreachable and the mutation was quorum-acknowledged by
+    ``quorum`` replica-set members under an epoch-fenced lease instead."""
+
+    degraded: bool
+    quorum: int
+    entry: Optional[Dict[str, Any]]
+
+    def __new__(
+        cls,
+        n: int,
+        *,
+        degraded: bool = False,
+        quorum: int = 0,
+        entry: Optional[Dict[str, Any]] = None,
+    ) -> "WriteResult":
+        obj = super().__new__(cls, n)
+        obj.degraded = degraded
+        obj.quorum = quorum
+        obj.entry = entry
+        return obj
 
 
 def _norm(path: str) -> str:
@@ -105,6 +131,8 @@ class Workspace:
         breaker_threshold: Optional[int] = None,
         breaker_cooldown_s: Optional[float] = None,
         failover: bool = True,
+        write_quorum: Optional[int] = None,
+        lease_ttl_s: Optional[float] = None,
     ):
         """``stripe_bytes`` / ``data_lanes`` shape the striped multi-lane
         transfer (0 / 1 restore the single-shot path); ``chunk_cache_bytes``
@@ -152,6 +180,10 @@ class Workspace:
             plane_kwargs["breaker_threshold"] = breaker_threshold
         if breaker_cooldown_s is not None:
             plane_kwargs["breaker_cooldown_s"] = breaker_cooldown_s
+        if write_quorum is not None:
+            plane_kwargs["write_quorum"] = write_quorum
+        if lease_ttl_s is not None:
+            plane_kwargs["lease_ttl_s"] = lease_ttl_s
         self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
         # The data plane: every cross-DC byte moves through it (striped
         # lanes + chunk cache + read-ahead); home-DC bytes stay direct.
@@ -199,27 +231,34 @@ class Workspace:
             is_dir=False,
             sync=True,
         )
-        if self.pipeline:
-            calls = [
-                ("getattr", {"path": parent}),          # 1 getattr
-                ("lookup", {"path": path}),             # 2 lookup
-                ("create", create_kw),                  # 3 create
-            ]
-            if not self.write_back:
-                calls.append(                           # 5 flush (same batch)
-                    ("update", {"path": path, "size": len(data), "sync": True})
-                )
-            results = self.plane.meta_batch(owner_idx, calls)
-            entry = results[2]
-        else:
-            # the paper's serial sequence: one channel round-trip per op
-            self.plane.meta_call(owner_idx, "getattr", path=parent)     # 1
-            self.plane.meta_call(owner_idx, "lookup", path=path)        # 2
-            entry = self.plane.meta_call(owner_idx, "create", **create_kw)  # 3
-            if not self.write_back:
-                self.plane.meta_call(                                    # 5
-                    owner_idx, "update", path=path, size=len(data), sync=True
-                )
+        try:
+            if self.pipeline:
+                calls = [
+                    ("getattr", {"path": parent}),          # 1 getattr
+                    ("lookup", {"path": path}),             # 2 lookup
+                    ("create", create_kw),                  # 3 create
+                ]
+                if not self.write_back:
+                    calls.append(                           # 5 flush (same batch)
+                        ("update", {"path": path, "size": len(data), "sync": True})
+                    )
+                results = self.plane.meta_batch(owner_idx, calls)
+                entry = results[2]
+            else:
+                # the paper's serial sequence: one channel round-trip per op
+                self.plane.meta_call(owner_idx, "getattr", path=parent)     # 1
+                self.plane.meta_call(owner_idx, "lookup", path=path)        # 2
+                entry = self.plane.meta_call(owner_idx, "create", **create_kw)  # 3
+                if not self.write_back:
+                    self.plane.meta_call(                                    # 5
+                        owner_idx, "update", path=path, size=len(data), sync=True
+                    )
+        except RpcUnavailable as exc:
+            # the owner is unreachable (partition, crash, open breaker):
+            # degrade to the quorum-acknowledged lease-fenced write path
+            # instead of failing — the write is accepted locally and
+            # converges on heal (anti-entropy reconciliation)
+            return self._degraded_write(path, data, exc)
         if dtn.dc_id == self.home_dc:                   # 4 write (local PFS)
             dtn.backend.write(path, data, owner=self.collaborator)
         else:                                           # 4 write (data plane:
@@ -240,6 +279,72 @@ class Workspace:
         dtn.backend.set_xattr(path, SYNC_XATTR, "true")
         self._index_hook(path, dtn, len(data))
         return len(data)
+
+    def _degraded_write(
+        self, path: str, data: bytes, exc: RpcUnavailable
+    ) -> WriteResult:
+        """Partition-tolerant write (ISSUE 9): accept the mutation at home.
+
+        The bytes land in the writer's home-DC backend (XUFS-style
+        accept-locally, reconcile-later) and the metadata row — stamped
+        ``dc_id = home`` so readers fetch the bytes from where they actually
+        are — is created by a reachable coordinator under an epoch-fenced
+        lease and acknowledged only after a quorum of replica-set members
+        durably applied it (:meth:`ServicePlane.quorum_create`).  The healed
+        owner converges through the replication pump + anti-entropy
+        reconciliation.  With ``failover=False`` (the fail-fast baseline) or
+        no replication tier the original unavailability propagates.
+        """
+        plane = self.plane
+        if not (plane.failover and self.collab.replication_enabled and plane.local_dtns):
+            raise exc
+        create_kw = dict(
+            path=path,
+            owner=self.collaborator,
+            dc_id=self.home_dc,
+            ns_id=self._ns_id(path),
+            is_dir=False,
+            sync=True,
+            size=len(data),
+        )
+        res = plane.quorum_create(path, create_kw)
+        entry = dict(res["entry"])
+        backend = self.collab.dc(self.home_dc).backend
+        backend.write(path, data, owner=self.collaborator)
+        backend.set_xattr(path, SYNC_XATTR, "true")
+        plane.note_entry(entry)
+        self._degraded_index_hook(path, len(data))
+        return WriteResult(
+            len(data), degraded=True, quorum=int(res["acks"]), entry=entry
+        )
+
+    def _degraded_index_hook(self, path: str, size: int) -> None:
+        """SDS coupling for a degraded write: register at a reachable home-DC
+        shard (origin role — the index rows converge via the pump) instead of
+        the unreachable owner.  Best-effort: with no reachable shard the
+        heal-time reconciler still converges the index."""
+        if self.extraction_mode not in (
+            ExtractionMode.INLINE_SYNC,
+            ExtractionMode.INLINE_ASYNC,
+        ):
+            return
+        for idx in self.plane.local_dtns:
+            try:
+                if self.extraction_mode == ExtractionMode.INLINE_SYNC:
+                    self.plane.sds_call(
+                        idx,
+                        "extract_and_index",
+                        path=path,
+                        attr_filter=self.attr_filter,
+                        stat_size=size,
+                    )
+                else:
+                    self.plane.sds_call(
+                        idx, "enqueue_index", path=path, dc_id=self.home_dc
+                    )
+                return
+            except RpcUnavailable:
+                continue
 
     def _index_hook(self, path: str, dtn: DTN, size: int) -> None:
         if self.extraction_mode == ExtractionMode.INLINE_SYNC:
@@ -500,10 +605,32 @@ class Workspace:
         return arr
 
     def tag(self, path: str, name: str, value: Any) -> None:
-        """Manual attribute tagging (§III-B5)."""
+        """Manual attribute tagging (§III-B5).  When the owning shard is
+        unreachable the tag is accepted at a reachable home-DC shard in
+        origin role (it converges via the pump + heal-time reconciliation)
+        rather than failing — the write-availability analogue of the
+        degraded read paths."""
         path = _norm(path)
         dtn = self._dtn(path)
-        self.plane.sds_call(dtn.dtn_id, "tag", path=path, name=name, value=value)
+        try:
+            self.plane.sds_call(dtn.dtn_id, "tag", path=path, name=name, value=value)
+            return
+        except RpcUnavailable as exc:
+            plane = self.plane
+            if not (plane.failover and self.collab.replication_enabled):
+                raise
+            for idx in plane.local_dtns:
+                if idx == dtn.dtn_id:
+                    continue
+                try:
+                    plane.guarded_call(
+                        "sds", idx, "tag", path=path, name=name, value=value
+                    )
+                    plane.degraded_writes += 1
+                    return
+                except RpcUnavailable:
+                    continue
+            raise exc
 
     def search(self, query: str) -> List[Dict[str, Any]]:
         """Attribute query via the scatter-gather planner (§III-B5).

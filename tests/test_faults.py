@@ -475,11 +475,162 @@ def test_async_indexer_not_started_while_down():
 
 # -- canned plans --------------------------------------------------------------
 def test_canned_plans_registry():
-    assert set(CANNED_PLANS) == {"drops", "flaky", "crash", "chaos"}
+    assert set(CANNED_PLANS) == {
+        "drops", "flaky", "crash", "chaos", "quorum", "lease-expiry",
+    }
     for name in CANNED_PLANS:
         assert isinstance(canned_plan(name, seed=2), FaultPlan)
     with pytest.raises(ValueError):
         canned_plan("nope")
+
+
+def test_heal_cancels_timed_restarts_and_resets_cadence():
+    """install_faults(None) must leave the collaboration indistinguishable
+    from one that never had the plan: pending crash_dtn_at_call timed
+    restarts cancelled (the victim restarted NOW, not 30 s later), partitions
+    lifted, and all cadence state (rule matched/fired, crash triggers) reset
+    — while the lifetime observability totals survive (fig13/fault_matrix
+    read plan.stats() after the heal)."""
+    c = _replicated()
+    try:
+        victim = next(d.dtn_id for d in c.dtns if d.dc_id == "dc1")
+        plan = (
+            FaultPlan(seed=5)
+            .duplicate(every=2)
+            .crash_dtn_at_call(victim, 3, restart_after_s=30.0)
+        )
+        c.install_faults(plan)
+        ws = _partitioned_reader(c, "alice")
+        for _ in range(6):
+            try:
+                ws.plane.meta_call(victim, "lookup", path="/heal/probe")
+            except RpcError:
+                pass
+        assert plan.crashes == 1 and c.dtns[victim].down
+        assert plan.duplicated > 0
+        timers = list(plan._timers)
+        assert timers  # the 30 s restart is pending
+        dup_before = plan.duplicated
+        c.install_faults(None)
+        # healed: victim back up immediately, timer cancelled, schedule reset
+        assert not c.dtns[victim].down
+        assert all(t.finished.is_set() for t in timers)
+        assert plan._timers == [] and plan._crashed_by_plan == set()
+        # schedule restored to the as-built spec: the crash trigger is
+        # re-armed (not gone) and no partitions were ever configured
+        assert plan._crash_at == {victim: [3, 30.0]} and plan._partitions == set()
+        for rule in plan._rules:
+            assert rule.matched == 0 and rule.fired == 0
+        # lifetime totals preserved: history, not pending behavior
+        assert plan.crashes == 1 and plan.duplicated == dup_before
+        assert plan.stats()["crashes"] == 1
+        # healed ≡ fresh: the very same plan re-installed starts its cadence
+        # from zero — the victim crashes again only after 3 fresh calls
+        c.install_faults(plan)
+        for _ in range(6):
+            try:
+                ws.plane.meta_call(victim, "lookup", path="/heal/probe2")
+            except RpcError:
+                pass
+        assert plan.crashes == 2 and c.dtns[victim].down
+        c.install_faults(None)
+        assert not c.dtns[victim].down
+        ws.close()
+    finally:
+        c.close()
+
+
+def test_resilience_stats_budget_exhaustion_and_dedup_evictions():
+    """Satellite 2: retry-budget exhaustion and server-side dedup-window
+    evictions are observable through resilience_stats() (plane + workspace)."""
+    c = _replicated()
+    try:
+        # (a) budget exhaustion: a 1-retry budget under a partition — the
+        # give-up is charged to the budget, not the per-call attempt cap
+        tight = RetryPolicy(max_attempts=4, base_s=0.0005, cap_s=0.002,
+                            timeout_s=0.0, deadline_s=1.0, budget=1)
+        ws = Workspace(c, "alice", "dc0", retry=tight, failover=False)
+        victim = next(d.dtn_id for d in c.dtns if d.dc_id == "dc1")
+        c.install_faults(FaultPlan(seed=0).partition("dc0", "dc1"))
+        for _ in range(3):
+            with pytest.raises(RpcUnavailable):
+                ws.plane.meta_call(victim, "lookup", path="/budget/x")
+        rs = ws.resilience_stats()
+        assert rs["budget_exhausted"] >= 1
+        c.install_faults(None)
+        # (b) dedup evictions: shrink every server's idempotency window to
+        # zero — each cached reply is immediately aged out and counted
+        for d in c.dtns:
+            d.metadata_server.dedup_window = 0
+            d.discovery_server.dedup_window = 0
+        ws2 = Workspace(c, "bob", "dc1", retry=FAST)
+        for i in range(3):
+            ws2.write(f"/budget/evict{i}.dat", b"x")
+        ws2.flush()
+        rs2 = ws2.resilience_stats()
+        assert rs2["dedup_evictions"] > 0
+        ws.close()
+        ws2.close()
+    finally:
+        c.close()
+
+
+def test_breaker_half_open_failed_probe_reopens_via_plane():
+    """Satellite 3a: a half-open probe that fails re-opens the breaker for a
+    fresh cooldown — observed through the plane's guarded_call path, not the
+    CircuitBreaker in isolation."""
+    c = _replicated()
+    try:
+        ws = _partitioned_reader(c, "dave", breaker_threshold=2, breaker_cooldown_s=0.05)
+        victim = next(d.dtn_id for d in c.dtns if d.dc_id == "dc1")
+        c.crash_dtn(victim)
+        for _ in range(2):
+            with pytest.raises(RpcUnavailable):
+                ws.plane.guarded_call("meta", victim, "lookup", path="/probe/x")
+        br = ws.plane.breakers[victim]
+        assert br.state == "open" and br.opened == 1
+        skips = ws.plane.breaker_skips
+        with pytest.raises(RpcUnavailable):
+            ws.plane.guarded_call("meta", victim, "lookup", path="/probe/x")
+        assert ws.plane.breaker_skips == skips + 1  # refused instantly, no RPC
+        time.sleep(0.06)
+        assert br.state == "half-open"
+        # the single probe goes through, fails (victim still down), re-opens
+        with pytest.raises(RpcUnavailable):
+            ws.plane.guarded_call("meta", victim, "lookup", path="/probe/x")
+        assert br.state == "open" and br.opened == 2
+        assert not br.allow()  # backed off for a fresh full cooldown
+        c.restart_dtn(victim)
+        ws.close()
+    finally:
+        c.close()
+
+
+def test_breaker_half_open_successful_probe_closes_via_plane():
+    """Satellite 3b: a half-open probe that succeeds fully closes the
+    breaker — subsequent calls flow without probe gating."""
+    c = _replicated()
+    try:
+        ws = _partitioned_reader(c, "dave", breaker_threshold=2, breaker_cooldown_s=0.05)
+        victim = next(d.dtn_id for d in c.dtns if d.dc_id == "dc1")
+        c.crash_dtn(victim)
+        for _ in range(2):
+            with pytest.raises(RpcUnavailable):
+                ws.plane.guarded_call("meta", victim, "lookup", path="/probe/y")
+        br = ws.plane.breakers[victim]
+        assert br.state == "open"
+        c.restart_dtn(victim)
+        time.sleep(0.06)
+        assert br.state == "half-open"
+        assert ws.plane.guarded_call("meta", victim, "lookup", path="/probe/y") is False
+        assert br.state == "closed"
+        # fully closed: back-to-back calls all admitted (no single-probe gate)
+        for _ in range(3):
+            ws.plane.guarded_call("meta", victim, "lookup", path="/probe/y")
+        assert br.state == "closed"
+        ws.close()
+    finally:
+        c.close()
 
 
 def test_fault_plan_seed_determinism():

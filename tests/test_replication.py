@@ -315,12 +315,17 @@ def test_ls_merges_replicas_without_duplicates(rcollab):
 
 def test_dtn_crash_restart_recovers_via_pump_retry(rcollab):
     alice = Workspace(rcollab, "alice", "dc0")
+    failfast = Workspace(rcollab, "bob", "dc0", failover=False)
     victim = 3
     rcollab.crash_dtn(victim)
-    # writes owned by the victim fail loudly; the rest of the plane works
     owned = [p for p in (f"/cr/o{i}.bin" for i in range(64)) if alice.plane.owner(p) == victim]
+    # fail-fast mounts still fail loudly on the victim's paths; failover
+    # mounts degrade to a quorum-acknowledged write on the surviving
+    # replica-set members (ISSUE 9) instead
     with pytest.raises(RpcError, match="unreachable"):
-        alice.write(owned[0], b"x")
+        failfast.write(owned[0], b"x")
+    res = alice.write(owned[0], b"xy")
+    assert res.degraded and res.quorum >= alice.plane.write_quorum
     survivors = [p for p in (f"/cr/s{i}.bin" for i in range(64)) if alice.plane.owner(p) != victim][:6]
     for p in survivors:
         alice.write(p, b"ok")
@@ -328,10 +333,14 @@ def test_dtn_crash_restart_recovers_via_pump_retry(rcollab):
     assert rcollab.quiesce_replication()
     tables = _meta_tables(rcollab)
     assert all(t == tables[0] for t in tables)
-    # the victim now serves the rows it missed while down
+    # the victim now serves the rows it missed while down — including the
+    # degraded write accepted while it was the (dead) owner
     row = rcollab.dtns[victim].metadata.getattr(survivors[0])
     assert row is not None and row["size"] == 2
+    row = rcollab.dtns[victim].metadata.getattr(owned[0])
+    assert row is not None and row["size"] == 2
     alice.close()
+    failfast.close()
 
 
 # -- write-back journal ------------------------------------------------------------
