@@ -136,6 +136,24 @@ def timed(fn: Callable[[], Any]) -> float:
     return time.perf_counter() - t0
 
 
+def hist_percentiles(snapshot: Optional[Dict[str, Any]]) -> Dict[str, float]:
+    """p50/p99 (plus count/mean) out of a telemetry Histogram snapshot.
+
+    ``Workspace.telemetry()`` returns histogram-valued metrics (e.g.
+    ``rpc.call_seconds``, ``datapath.transfer_seconds``) as snapshot dicts
+    with precomputed log-bucket percentiles; benchmarks report latency
+    distributions through this instead of timing every call by hand.
+    """
+    if not snapshot or not snapshot.get("count"):
+        return {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0}
+    return {
+        "count": int(snapshot["count"]),
+        "mean": float(snapshot["sum"]) / float(snapshot["count"]),
+        "p50": float(snapshot["p50"]),
+        "p99": float(snapshot["p99"]),
+    }
+
+
 def save_result(name: str, payload: Dict) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

@@ -9,10 +9,11 @@
 # path, compacted shipping, shard pruning), and the fig12 data-plane benchmark
 # (striped multi-lane transfers, chunk cache, scidata read-ahead), the
 # fig13 fault-plane benchmark (partition failover availability, exactly-once
-# chaos goodput), and the fig14 quorum benchmark (partition-tolerant write
-# availability, heal-time convergence), writing
-# results/fig{7,9d,10,11,12,13,14}*.json.  Exits non-zero when a benchmark
-# errors, a fig7/fig10/fig11/fig12/fig13/fig14 claim
+# chaos goodput), the fig14 quorum benchmark (partition-tolerant write
+# availability, heal-time convergence), and the fig15 telemetry-overhead gate
+# (tracing-on vs tracing-off <= 5% on the pipelined write burst), writing
+# results/fig{7,9d,10,11,12,13,14,15}*.json.  Exits non-zero when a benchmark
+# errors, a fig7/fig10/fig11/fig12/fig13/fig14/fig15 claim
 # fails (their main() raises), or the
 # perf-regression gate trips: scripts/bench_gate.py compares the key
 # speedup/reduction ratios against the committed baseline
@@ -35,6 +36,7 @@ from benchmarks import (
     fig12_datapath,
     fig13_faults,
     fig14_quorum,
+    fig15_telemetry,
 )
 
 fig7_blocksize.main(quick=$QUICK)  # raises if LW stops beating the baseline
@@ -51,10 +53,12 @@ print()
 fig13_faults.main(quick=$QUICK)  # raises if a fault-plane claim fails
 print()
 fig14_quorum.main(quick=$QUICK)  # raises if a quorum/lease claim fails
+print()
+fig15_telemetry.main(quick=$QUICK)  # raises if tracing overhead exceeds 5%
 EOF
 
 echo
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/bench_gate.py
 
 echo
-echo "bench: OK (results/fig{7_blocksize,9d_plane,10_replication,11_wirepath,12_datapath,13_faults,14_quorum}.json)"
+echo "bench: OK (results/fig{7_blocksize,9d_plane,10_replication,11_wirepath,12_datapath,13_faults,14_quorum,15_telemetry}.json)"

@@ -47,6 +47,11 @@ def gate() -> int:
             doc = json.load(f)
         for dotted, want in metrics.items():
             got = _lookup(doc, dotted)
+            if want is None:
+                # forward-compat: a null baseline pins nothing (a newer
+                # bench's metric listed in an older baseline) — report only
+                print(f"  skip {bench}.{dotted}: no baseline recorded (got {got})")
+                continue
             floor = want * (1.0 - tol)
             if got is None:
                 failures.append(f"{bench}.{dotted}: metric missing from results")

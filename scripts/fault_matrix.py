@@ -34,6 +34,7 @@ traceback otherwise.  scripts/tier1.sh runs this after the pytest ratchet.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -96,6 +97,15 @@ def _owned_paths(collab: Collaboration, dc_id: str, n: int) -> list:
     raise RuntimeError(f"could not find {n} {dc_id}-owned paths")
 
 
+def _assert_scrape(ws: Workspace, name: str) -> None:
+    """Every cell must leave a non-empty, JSON-serializable telemetry scrape
+    behind — the contract scripts/trace_dump.py --smoke also exercises."""
+    tel = ws.telemetry()
+    assert tel, f"{name}: empty telemetry scrape"
+    assert tel.get("rpc.calls", 0) > 0, f"{name}: scrape missing rpc.calls"
+    json.dumps(tel)  # raises on anything a real scraper could not export
+
+
 def run_partition_cell(name: str, seed: int) -> str:
     """Partition cell: degraded quorum writes, then heal-time convergence."""
     collab = _make_collab()
@@ -132,6 +142,7 @@ def run_partition_cell(name: str, seed: int) -> str:
         )
         for p, data in payloads.items():
             assert bob.read(p) == data, f"{name}: corrupt read-back for {p}"
+        _assert_scrape(alice, name)
         return (
             f"{sum(fired.values()):3d} faults "
             f"(blocked {fired['blocked']} dup {fired['duplicated']} "
@@ -179,6 +190,7 @@ def run_cell(name: str, seed: int) -> str:
         assert _deduped(collab) > 0, (
             f"{name}: lossy plan but no server-side dedup — retries may double-apply"
         )
+    _assert_scrape(alice, name)
     return (
         f"{injected:3d} faults "
         f"(drop {fired['dropped']}+{fired['dropped_replies']} "

@@ -68,4 +68,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/fault_matrix.py ||
     echo "tier-1: fault matrix FAILED"
     exit 1
 }
+
+# telemetry smoke: replay the chaos plan and assert the unified scrape is
+# non-empty + JSON-serializable and every op's trace tree reassembles
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" "$PYTHON" scripts/trace_dump.py --smoke || {
+    echo "tier-1: telemetry smoke FAILED"
+    exit 1
+}
 exit 0

@@ -28,6 +28,7 @@ from repro.core.replication import (
     WB_MAX_AGE_S,
     WB_MAX_PENDING,
 )
+from repro.core.telemetry import HIST_BUCKETS, TRACE_BUFFER_SPANS, TRACE_ENABLED
 
 __all__ = ["TESTBED"]
 
@@ -130,6 +131,20 @@ class TestbedConfig:
     write_quorum: int = WRITE_QUORUM
     lease_ttl_s: float = DEFAULT_LEASE_TTL_S
     reconcile_timeout_s: float = RECONCILE_TIMEOUT_S
+    # telemetry-plane knobs (core/telemetry.py; honored by
+    # Collaboration.add_datacenter(trace_enabled=..., ...) and
+    # Workspace(trace_enabled=..., ...)):
+    # - trace_enabled: mint trace/span IDs at every Workspace entry point and
+    #   carry them in RPC envelopes so each hop records a causally-linked
+    #   span; off turns every trace entry point into a near-free no-op
+    #   (benchmarks/fig15_telemetry.py gates the on-vs-off overhead <= 5%)
+    # - trace_buffer_spans: per-node bounded span buffer depth (oldest spans
+    #   age out first; Collaboration.collect_trace stitches across buffers)
+    # - hist_buckets: log2 bucket count for registry latency/byte histograms
+    #   (rpc.call_seconds, datapath.transfer_seconds/_bytes)
+    trace_enabled: bool = TRACE_ENABLED
+    trace_buffer_spans: int = TRACE_BUFFER_SPANS
+    hist_buckets: int = HIST_BUCKETS
 
 
 TESTBED = TestbedConfig()

@@ -40,6 +40,14 @@ Layers (bottom-up):
   write path and the heal-time :class:`AntiEntropyReconciler`
   (``Collaboration.reconcile()``) complete the accept-now/reconcile-later
   story.
+- :mod:`repro.core.telemetry` — the **telemetry plane**: a unified
+  :class:`MetricsRegistry` of typed counters/gauges/histograms with
+  hierarchical dotted names (folded cluster-wide by
+  ``Collaboration.observe()`` / ``Workspace.telemetry()``), cross-DC
+  distributed tracing (trace/span IDs minted at Workspace entry points and
+  carried in RPC envelopes; ``Collaboration.collect_trace()`` reassembles
+  the causal tree), and per-op timeline profiling
+  (:func:`render_timeline`, :func:`chrome_trace`).
 """
 
 from .backends import MemoryBackend, OWNER_XATTR, PosixBackend, StorageBackend, SYNC_XATTR
@@ -80,6 +88,20 @@ from .rpc import (
     RpcUnavailable,
     pack,
     unpack,
+)
+from .telemetry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Span,
+    SpanBuffer,
+    Telemetry,
+    Tracer,
+    assemble_trace,
+    chrome_trace,
+    fold_snapshots,
+    render_timeline,
 )
 from .scidata import (
     SciFile,
@@ -152,6 +174,18 @@ __all__ = [
     "RpcUnavailable",
     "pack",
     "unpack",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "SpanBuffer",
+    "Telemetry",
+    "Tracer",
+    "assemble_trace",
+    "chrome_trace",
+    "fold_snapshots",
+    "render_timeline",
     "SciFile",
     "attr_type_of",
     "read_dataset",

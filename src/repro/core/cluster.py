@@ -33,12 +33,18 @@ from .replication import (
     ReplicationLog,
 )
 from .rpc import Channel, RpcServer
+from .telemetry import Telemetry, assemble_trace, fold_snapshots
 
 __all__ = ["DTN", "DataCenter", "Collaboration", "ChannelPolicy", "REPLICA_N"]
 
 #: default size of a path's replica set (owner + ring successors) — the N of
 #: "W of N" quorum writes; configs/scispace_testbed.py re-exports this
 REPLICA_N = 3
+
+
+def _drop_ids(stats: Dict) -> Dict:
+    """Strip identity fields (dtn_id) that must not sum across a fold."""
+    return {k: v for k, v in stats.items() if k != "dtn_id"}
 
 
 class DTN:
@@ -58,10 +64,21 @@ class DTN:
         backend: StorageBackend,
         db_dir: Optional[str],
         summary_bits: Optional[int] = None,
+        trace_enabled: Optional[bool] = None,
+        trace_buffer_spans: Optional[int] = None,
+        hist_buckets: Optional[int] = None,
     ):
         self.dtn_id = dtn_id
         self.dc_id = dc_id
         self.backend = backend
+        #: this node's metrics registry + span buffer; both RPC servers record
+        #: server-side spans into it and ``Collaboration.observe()`` folds it
+        self.telemetry = Telemetry(
+            f"dtn{dtn_id}@{dc_id}",
+            trace_enabled=trace_enabled,
+            trace_buffer_spans=trace_buffer_spans,
+            hist_buckets=hist_buckets,
+        )
         if db_dir is None:
             meta_db = disc_db = ":memory:"
         else:
@@ -91,15 +108,36 @@ class DTN:
         )
         self.metadata_server = RpcServer(
             self.metadata, name=f"meta@dtn{dtn_id}", clock=self.clock, site=dc_id,
-            fences=self.leases,
+            fences=self.leases, telemetry=self.telemetry,
         )
         self.discovery_server = RpcServer(
             self.discovery, name=f"sds@dtn{dtn_id}", clock=self.clock, site=dc_id,
-            fences=self.leases,
+            fences=self.leases, telemetry=self.telemetry,
         )
         self.async_indexer: Optional[AsyncIndexer] = None
         self.replica_pump: Optional[ReplicaPump] = None
         self._indexer_kwargs: Optional[dict] = None
+        # fold this node's pre-existing stats() surfaces into the registry at
+        # scrape time (one source of truth per counter, no hand-merged dicts)
+        tel = self.telemetry
+        tel.add_collector("rpc", self._server_stats)
+        tel.add_collector("lease", self.leases.stats)
+        tel.add_collector("meta", lambda: _drop_ids(self.metadata.stats()))
+        tel.add_collector("sds", lambda: _drop_ids(self.discovery.stats()))
+        tel.add_collector("replication", self._pump_stats)
+
+    def _server_stats(self) -> Dict[str, int]:
+        ms, ds = self.metadata_server, self.discovery_server
+        return {
+            "requests": ms.requests + ds.requests,
+            "deduped": ms.deduped + ds.deduped,
+            "dedup_evictions": ms.dedup_evictions + ds.dedup_evictions,
+            "fenced_rejections": ms.fenced_rejections + ds.fenced_rejections,
+        }
+
+    def _pump_stats(self) -> Dict[str, float]:
+        pump = self.replica_pump
+        return _drop_ids(pump.stats()) if pump is not None else {}
 
     def start_async_indexer(self, **kwargs) -> AsyncIndexer:
         if self.async_indexer is None:
@@ -223,7 +261,60 @@ class Collaboration:
         self.quiesce_reason: Optional[str] = None
         #: the last heal-time reconcile's report (see :meth:`reconcile`)
         self.last_reconcile: Optional[Dict[str, object]] = None
+        #: telemetry knob defaults planes/DTNs inherit when built without
+        #: explicit values (set via :meth:`add_datacenter`'s kwargs)
+        self.trace_enabled: Optional[bool] = None
+        self.trace_buffer_spans: Optional[int] = None
+        self.hist_buckets: Optional[int] = None
+        #: fabric-wide telemetry: cluster-scope spans (reconcile) land here
+        self.telemetry = Telemetry("cluster")
+        #: every span buffer in the fabric (DTNs, planes, the cluster bundle)
+        #: — the search set for :meth:`collect_trace`
+        self._span_buffers = [self.telemetry.spans]
+        #: prefix -> (trace_id, span_id) of the latest degraded quorum write,
+        #: so the heal-time reconcile span can join that write's trace
+        self._trace_links: Dict[str, tuple] = {}
         self._lock = threading.Lock()
+
+    # -- telemetry ---------------------------------------------------------------
+    def register_telemetry(self, telemetry: Telemetry) -> None:
+        """Make a bundle's spans findable by :meth:`collect_trace` (DTNs
+        self-register; planes register on construction)."""
+        with self._lock:
+            if telemetry.spans not in self._span_buffers:
+                self._span_buffers.append(telemetry.spans)
+
+    def link_trace(self, prefix: str, ctx: Optional[tuple]) -> None:
+        """Remember the trace context of a degraded write under ``prefix``;
+        the next :meth:`reconcile` covering it parents its span there."""
+        if ctx is not None:
+            with self._lock:
+                self._trace_links[prefix] = ctx
+
+    def observe(self) -> Dict[str, object]:
+        """One flat scrape of the server side of the fabric: every DTN's
+        registry (RPC servers, lease tables, shard row counts, pump
+        counters) folded with the fault plane's and invalidation bus's
+        counters.  Client-plane counters live in ``Workspace.telemetry()``,
+        which folds this in."""
+        snaps = [dtn.telemetry.snapshot() for dtn in self.dtns]
+        extra: Dict[str, object] = {"invalidations.published": self.invalidations.published}
+        if self.fault_plan is not None:
+            for k, v in self.fault_plan.stats().items():
+                extra[f"faults.{k}"] = v
+        snaps.append(extra)
+        return fold_snapshots(snaps)
+
+    def collect_trace(self, trace_id: int) -> Optional[Dict[str, object]]:
+        """Assemble the cross-DC span tree for one trace: gather matching
+        spans from every registered buffer (client planes, every DTN, the
+        cluster bundle) and stitch them by parent links."""
+        with self._lock:
+            buffers = list(self._span_buffers)
+        spans = []
+        for buf in buffers:
+            spans.extend(buf.for_trace(trace_id))
+        return assemble_trace(spans)
 
     # -- construction -----------------------------------------------------------
     def add_datacenter(
@@ -236,11 +327,27 @@ class Collaboration:
         store_gbps: float = 0.0,
         store_lat_s: float = 0.0,
         summary_bits: Optional[int] = None,
+        trace_enabled: Optional[bool] = None,
+        trace_buffer_spans: Optional[int] = None,
+        hist_buckets: Optional[int] = None,
     ) -> DataCenter:
-        """Add a DC.  ``root=None`` ⇒ in-memory PFS; else a PosixBackend at root."""
+        """Add a DC.  ``root=None`` ⇒ in-memory PFS; else a PosixBackend at root.
+
+        The telemetry knobs (``trace_enabled``, ``trace_buffer_spans``,
+        ``hist_buckets`` — see configs/scispace_testbed.py) flow into this
+        DC's DTN servers and become the collaboration-wide defaults planes
+        built afterwards inherit; ``None`` keeps the module defaults.
+        """
         with self._lock:
             if dc_id in self.datacenters:
                 raise ValueError(f"duplicate DC id {dc_id!r}")
+            if trace_enabled is not None:
+                self.trace_enabled = trace_enabled
+                self.telemetry.tracer.enabled = trace_enabled
+            if trace_buffer_spans is not None:
+                self.trace_buffer_spans = trace_buffer_spans
+            if hist_buckets is not None:
+                self.hist_buckets = hist_buckets
             backend: StorageBackend
             backend = (
                 MemoryBackend(dc_id, store_gbps=store_gbps, store_lat_s=store_lat_s)
@@ -249,9 +356,15 @@ class Collaboration:
             )
             dc = DataCenter(dc_id, backend)
             for _ in range(n_dtns):
-                dtn = DTN(len(self.dtns), dc_id, backend, db_dir, summary_bits=summary_bits)
+                dtn = DTN(
+                    len(self.dtns), dc_id, backend, db_dir, summary_bits=summary_bits,
+                    trace_enabled=self.trace_enabled,
+                    trace_buffer_spans=self.trace_buffer_spans,
+                    hist_buckets=self.hist_buckets,
+                )
                 dc.dtns.append(dtn)
                 self.dtns.append(dtn)
+                self._span_buffers.append(dtn.telemetry.spans)
             self.datacenters[dc_id] = dc
             return dc
 
@@ -379,9 +492,30 @@ class Collaboration:
         """Run heal-time anti-entropy over ``prefix`` and return the report
         (see :class:`~repro.core.replication.AntiEntropyReconciler`).  Call
         after ``install_faults(None)`` heals a partition during which
-        degraded quorum writes were accepted."""
+        degraded quorum writes were accepted.
+
+        When a degraded quorum write under ``prefix`` registered a trace
+        link (:meth:`link_trace`), the reconcile span joins that write's
+        trace as a child — the assembled tree then shows the full causal
+        story: lease fan-out, journal intent, quorum pushes, and the
+        heal-time convergence that completed them."""
+        parent = None
+        with self._lock:
+            for linked_prefix in sorted(self._trace_links, key=len, reverse=True):
+                if linked_prefix.startswith(prefix) or prefix.startswith(linked_prefix):
+                    parent = self._trace_links.pop(linked_prefix)
+                    break
         reconciler = AntiEntropyReconciler(self, prefix=prefix)
-        report = reconciler.run(timeout_s=timeout_s)
+        with self.telemetry.tracer.span("reconcile", parent=parent, prefix=prefix) as sp:
+            report = reconciler.run(timeout_s=timeout_s)
+            if sp is not None:
+                sp.tags.update(
+                    records_replayed=report.get("records_replayed", 0),
+                    conflicts_resolved=report.get("conflicts_resolved", 0),
+                    converged=bool(report.get("converged")),
+                )
+                if not report.get("converged"):
+                    sp.status = "degraded"
         self.last_reconcile = report
         return report
 

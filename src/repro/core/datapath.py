@@ -66,6 +66,7 @@ from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
 from .metadata import path_hash
 from .rpc import Channel, RetryPolicy, RpcError, RpcTimeout, RpcUnavailable
+from .telemetry import now as _tel_now
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->datapath cycle
     from .cluster import Collaboration, DataCenter
@@ -181,6 +182,8 @@ class ChunkCache:
         self._bytes = 0
         self.hits = 0
         self.misses = 0
+        self.hit_bytes = 0
+        self.miss_bytes = 0
         self.invalidations = 0
         self.evictions = 0
         self.stale_inserts = 0
@@ -295,9 +298,11 @@ class ChunkCache:
                 return b""
             if rec is None or self._missing_locked(rec, start, end):
                 self.misses += 1
+                self.miss_bytes += end - start
                 return None
             self._records.move_to_end(path)
             self.hits += 1
+            self.hit_bytes += end - start
             for s, buf in rec.extents:
                 # common case: one extent covers the whole request — a hit is
                 # then ONE copy out of the extent, not an assemble
@@ -420,6 +425,8 @@ class ChunkCache:
                 "bytes": self._bytes,
                 "hits": self.hits,
                 "misses": self.misses,
+                "hit_bytes": self.hit_bytes,
+                "miss_bytes": self.miss_bytes,
                 "invalidations": self.invalidations,
                 "evictions": self.evictions,
                 "stale_inserts": self.stale_inserts,
@@ -448,10 +455,21 @@ class DataPath:
         range_align: int = RANGE_ALIGN,
         subscribe: bool = True,
         retry: Optional[RetryPolicy] = None,
+        tracer: Any = None,
+        metrics: Any = None,
     ):
         self.collab = collab
         self.home_dc = home_dc
         self.retry = retry
+        self.tracer = tracer
+        self._hist_xfer_s = (
+            metrics.histogram("datapath.transfer_seconds") if metrics is not None else None
+        )
+        self._hist_xfer_b = (
+            metrics.histogram("datapath.transfer_bytes", scale=1.0)
+            if metrics is not None
+            else None
+        )
         self._retry_rng = (
             random.Random(f"{retry.seed}:datapath:{home_dc}") if retry is not None else None
         )
@@ -565,6 +583,87 @@ class DataPath:
             )
         return max(store_done)
 
+    @staticmethod
+    def _lane_profile(
+        pieces: List[Tuple[float, int]], lanes: List[Channel], *, inbound: bool
+    ) -> List[Tuple[int, float, int, float]]:
+        """Per-lane ``(lane, finish_s, bytes, wire_s)`` replaying the same
+        round-robin hand-off as :meth:`_makespan_in`/:meth:`_makespan_out` —
+        the trace's lane child spans are reconstructed from this, not
+        separately timed."""
+        n = len(lanes)
+        first = [0.0] * n  # store-fetch stream (in) / wire stream (out)
+        second = [0.0] * n  # wire stream (in) / store stream (out)
+        lane_bytes = [0] * n
+        lane_wire = [0.0] * n
+        for k, (store_s, nbytes) in enumerate(pieces):
+            lane = k % n
+            w = lanes[lane].payload_seconds(nbytes)
+            lane_bytes[lane] += nbytes
+            lane_wire[lane] += w
+            if inbound:
+                first[lane] += store_s
+                second[lane] = max(second[lane], first[lane]) + w
+            else:
+                first[lane] += w
+                second[lane] = (
+                    max(second[lane], first[lane] + lanes[lane].latency_s) + store_s
+                )
+        out: List[Tuple[int, float, int, float]] = []
+        for i in range(n):
+            if lane_bytes[i] <= 0:
+                continue
+            finish = second[i] + (lanes[i].latency_s if inbound else 0.0)
+            out.append((i, finish, lane_bytes[i], lane_wire[i] + lanes[i].latency_s))
+        return out
+
+    def _trace_transfer(
+        self,
+        name: str,
+        dc_id: str,
+        makespan: float,
+        pieces: List[Tuple[float, int]],
+        moved: int,
+        failed: bool,
+        *,
+        inbound: bool,
+    ) -> None:
+        """Record a ``data.read``/``data.write`` span (plus per-lane children
+        for striped transfers) backdated over the makespan just slept.  Only
+        fires under an active trace context — the foreground op's span or a
+        ``data.prefetch`` root in the worker thread."""
+        tracer = self.tracer
+        if tracer is None or not tracer.enabled:
+            return
+        ctx = tracer.current()
+        if ctx is None:
+            return
+        t_end = _tel_now()
+        t0 = t_end - makespan
+        lanes = self._lanes(dc_id)
+        sp = tracer.record(
+            name,
+            parent=ctx,
+            status="unavailable" if failed else "ok",
+            wire_s=makespan,
+            start=t0,
+            end=t_end,
+            tags={"dc": dc_id, "bytes": moved, "chunks": len(pieces), "lanes": len(lanes)},
+        )
+        if sp is None or len(pieces) <= 1:
+            return  # single-chunk transfers ride the control stream: no lane fan-out
+        t_lanes = t0 + self._handshake_s(dc_id, len(pieces))
+        pctx = (sp.trace_id, sp.span_id)
+        for lane, finish, nbytes, wire in self._lane_profile(pieces, lanes, inbound=inbound):
+            tracer.record(
+                "data.lane",
+                parent=pctx,
+                wire_s=wire,
+                start=t_lanes,
+                end=t_lanes + finish,
+                tags={"lane": lane, "bytes": nbytes},
+            )
+
     # -- transfers ----------------------------------------------------------
     def _chop(self, start: int, end: int) -> List[_Range]:
         if end <= start:
@@ -641,6 +740,12 @@ class DataPath:
             else:
                 self.remote_reads += 1
                 self.bytes_read += moved
+        if self._hist_xfer_s is not None and makespan > 0.0:
+            self._hist_xfer_s.observe(makespan)
+            self._hist_xfer_b.observe(moved)
+        self._trace_transfer(
+            "data.read", dc_id, makespan, pieces, moved, failure is not None, inbound=True
+        )
         if failure is not None:
             raise TransferInterrupted(str(failure), parts=parts)
         return parts
@@ -816,11 +921,18 @@ class DataPath:
         )
         if makespan > 0:
             time.sleep(makespan)
+        moved = sum(n for _, n in pieces)
         with self._stats_lock:
             self.wire_seconds += makespan
-            self.bytes_written += sum(n for _, n in pieces)
+            self.bytes_written += moved
             if failure is not None:
                 self.interrupted_transfers += 1
+        if self._hist_xfer_s is not None and makespan > 0.0:
+            self._hist_xfer_s.observe(makespan)
+            self._hist_xfer_b.observe(moved)
+        self._trace_transfer(
+            "data.write", dc.dc_id, makespan, pieces, moved, failure is not None, inbound=False
+        )
         if failure is not None:
             wrapped = TransferInterrupted(str(failure))
             wrapped.chunks_done = done  # resume point for a retried write
@@ -925,6 +1037,19 @@ class DataPath:
                 self._queue.task_done()
 
     def _do_prefetch(self, dc_id: str, path: str, ranges: List[_Range], epoch: int) -> None:
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            # the worker thread has no foreground context, so this span roots
+            # its own trace — overlap with foreground reads (fig12) is visible
+            # as concurrent data.prefetch roots in the buffer
+            with tracer.span("data.prefetch", path=path, dc=dc_id):
+                self._do_prefetch_inner(dc_id, path, ranges, epoch)
+        else:
+            self._do_prefetch_inner(dc_id, path, ranges, epoch)
+
+    def _do_prefetch_inner(
+        self, dc_id: str, path: str, ranges: List[_Range], epoch: int
+    ) -> None:
         size = self.collab.dc(dc_id).backend.stat(path).size
         wanted = merge_ranges(
             [self._align(max(0, s), min(size, e), size) for s, e in ranges if e > s]
@@ -977,9 +1102,9 @@ class DataPath:
         self._queue.join()
 
     # -- accounting / lifecycle --------------------------------------------
-    def stats(self) -> Dict[str, Any]:
+    def _own_stats(self) -> Dict[str, Any]:
         with self._stats_lock:
-            out: Dict[str, Any] = {
+            return {
                 "remote_reads": self.remote_reads,
                 "remote_writes": self.remote_writes,
                 "bytes_read": self.bytes_read,
@@ -992,8 +1117,20 @@ class DataPath:
                 "interrupted_transfers": self.interrupted_transfers,
                 "transfer_retries": self.transfer_retries,
             }
+
+    def stats(self) -> Dict[str, Any]:
+        """Legacy flat shape (``cache_<k>`` keys) — same source of truth as
+        :meth:`stats_flat`, which the telemetry registry scrapes."""
+        out = self._own_stats()
         for k, v in self.cache.stats().items():
             out[f"cache_{k}"] = v
+        return out
+
+    def stats_flat(self) -> Dict[str, Any]:
+        """Registry collector: nested ``cache`` dict flattens to the
+        documented ``datapath.cache.*`` metric names."""
+        out = self._own_stats()
+        out["cache"] = self.cache.stats()
         return out
 
     def close(self) -> None:

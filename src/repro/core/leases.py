@@ -213,9 +213,13 @@ class LeaseManager:
         *,
         ttl_s: float = DEFAULT_LEASE_TTL_S,
         stand_ins: Optional[Callable[[str], List[int]]] = None,
+        tracer: Optional[Any] = None,
     ):
         self.holder = holder
         self.ttl_s = ttl_s
+        #: plane Tracer (optional): each acquisition records a
+        #: ``lease.acquire`` span whose children are the grant-fan-out RPCs
+        self._tracer = tracer
         self._replica_set = replica_set
         #: hinted-handoff extension of the preference list (Dynamo-style):
         #: when replica-set members are unreachable, further ring successors
@@ -249,7 +253,21 @@ class LeaseManager:
         quorum; see module docstring for why that is safe here).  A live
         conflicting holder -> :class:`LeaseHeldElsewhere`; nothing reachable
         or grants below even the sloppy bar -> :class:`LeaseUnavailable`.
+
+        With a tracer, the fan-out runs under a ``lease.acquire`` span
+        (status ``degraded`` when the grant set needed stand-ins).
         """
+        if self._tracer is None:
+            return self._acquire(prefix)
+        with self._tracer.span("lease.acquire", prefix=prefix) as sp:
+            lease = self._acquire(prefix)
+            if sp is not None:
+                sp.tags.update(grants=len(lease.grants), token=lease.token)
+                if lease.degraded:
+                    sp.status = "degraded"
+            return lease
+
+    def _acquire(self, prefix: str) -> Lease:
         members = self._replica_set(prefix)
         need = len(members) // 2 + 1
         grants: List[int] = []

@@ -48,6 +48,7 @@ from .metadata import hash_placement, path_hash
 from .query import ShardSummary
 from .replication import WB_MAX_AGE_S, WB_MAX_PENDING, WriteBackJournal
 from .rpc import RetryPolicy, RpcClient, RpcError, RpcFenced, RpcUnavailable
+from .telemetry import Telemetry, fold_snapshots
 
 if TYPE_CHECKING:  # pragma: no cover - type-only, avoids a cluster<->plane cycle
     from .cluster import Collaboration
@@ -319,6 +320,9 @@ class ServicePlane:
         failover: bool = True,
         write_quorum: int = WRITE_QUORUM,
         lease_ttl_s: float = DEFAULT_LEASE_TTL_S,
+        trace_enabled: Optional[bool] = None,
+        trace_buffer_spans: Optional[int] = None,
+        hist_buckets: Optional[int] = None,
     ):
         self.collab = collab
         self.home_dc = home_dc
@@ -328,18 +332,42 @@ class ServicePlane:
         #: degrade reads to home-DC replicas when the origin is unreachable
         #: (off = the fail-fast baseline fig13 measures against)
         self.failover = failover
+        #: this plane's metrics registry + span buffer + tracer; unset knobs
+        #: inherit the collaboration-wide defaults set by ``add_datacenter``
+        ordinal = next(_holder_seq)
+        self.telemetry = Telemetry(
+            f"{home_dc}/plane{ordinal}",
+            trace_enabled=(
+                trace_enabled if trace_enabled is not None
+                else getattr(collab, "trace_enabled", None)
+            ),
+            trace_buffer_spans=(
+                trace_buffer_spans if trace_buffer_spans is not None
+                else getattr(collab, "trace_buffer_spans", None)
+            ),
+            hist_buckets=(
+                hist_buckets if hist_buckets is not None
+                else getattr(collab, "hist_buckets", None)
+            ),
+        )
+        register = getattr(collab, "register_telemetry", None)
+        if register is not None:
+            register(self.telemetry)
         # provider, not a snapshot: plans installed mid-run take effect on
         # the very next message, and None keeps the hot path overhead-free
         faults = lambda: getattr(collab, "fault_plan", None)  # noqa: E731
+        tracer, registry = self.telemetry.tracer, self.telemetry.registry
         self.meta: List[RpcClient] = []
         self.sds: List[RpcClient] = []
         for dtn in collab.dtns:
             ch = collab.channel_policy(home_dc, dtn.dc_id)
             self.meta.append(
-                RpcClient(dtn.metadata_server, ch, site=home_dc, retry=retry, faults=faults)
+                RpcClient(dtn.metadata_server, ch, site=home_dc, retry=retry, faults=faults,
+                          tracer=tracer, metrics=registry)
             )
             self.sds.append(
-                RpcClient(dtn.discovery_server, ch, site=home_dc, retry=retry, faults=faults)
+                RpcClient(dtn.discovery_server, ch, site=home_dc, retry=retry, faults=faults,
+                          tracer=tracer, metrics=registry)
             )
         #: one breaker per DTN, shared by that DTN's meta + sds clients —
         #: a dead DTN takes both services with it
@@ -389,11 +417,12 @@ class ServicePlane:
         #: lease carry its fencing token so a superseded holder is refused
         #: (RpcFenced) before the write can reach any replica log
         self.lease_manager = LeaseManager(
-            holder=f"{home_dc}/plane{next(_holder_seq)}",
+            holder=f"{home_dc}/plane{ordinal}",
             replica_set=lambda prefix: collab.replica_set(prefix),
             stand_ins=self._ring_rest,
             call=lambda idx, method, **kw: self.guarded_call("meta", idx, method, **kw),
             ttl_s=lease_ttl_s,
+            tracer=tracer,
         )
         #: shard-pruning summary cache: dtn_idx -> (epoch, cached_at, summary).
         #: The authoritative pruning source is :meth:`note_summaries_bulk` —
@@ -423,6 +452,40 @@ class ServicePlane:
             self._bus.subscribe(self.cache)
         self.max_inflight = max(1, max_inflight)
         self._closed = False
+        # scrape-time collectors: the registry *pulls* the live counters, so
+        # resilience_stats()/rpc_stats() become shims over one fold and the
+        # hand-merged-keys drift hazard is gone
+        self.telemetry.add_collector("rpc", self.rpc_stats)
+        self.telemetry.add_collector("plane", self._plane_stats)
+        self.telemetry.add_collector("attrcache", self.cache.stats)
+        self.telemetry.add_collector("lease", self.lease_manager.stats)
+
+    def _plane_stats(self) -> Dict[str, Any]:
+        """This plane's own counters (degraded serves, breakers, quorum
+        writes, shard pruning) under the ``plane.`` metric prefix."""
+        return {
+            "replica_hits": self.replica_hits,
+            "replica_stale_fallbacks": self.replica_stale_fallbacks,
+            "degraded_reads": self.degraded_reads,
+            "stale_serves": self.stale_serves,
+            "breaker_skips": self.breaker_skips,
+            "breakers_opened": sum(b.opened for b in self.breakers),
+            "degraded_writes": self.degraded_writes,
+            "quorum_acks": self.quorum_acks,
+            "shard_contacts": self.shard_contacts,
+            "shards_pruned": self.shards_pruned,
+            "pruned_empty_queries": self.pruned_empty_queries,
+        }
+
+    def telemetry_fold(self) -> Dict[str, Any]:
+        """This plane's registry folded with the fabric's
+        :meth:`~repro.core.cluster.Collaboration.observe` scrape — every
+        counter one mount can see, flat, under hierarchical dotted names."""
+        snaps = [self.telemetry.snapshot()]
+        observe = getattr(self.collab, "observe", None)
+        if observe is not None:
+            snaps.append(observe())
+        return fold_snapshots(snaps)
 
     # -- placement ------------------------------------------------------------
     def n_dtns(self) -> int:
@@ -474,6 +537,11 @@ class ServicePlane:
     def _breaker_check(self, dtn_idx: int) -> None:
         if not self.breakers[dtn_idx].allow():
             self.breaker_skips += 1
+            # an open circuit refuses without touching the wire, so no RPC
+            # span exists — record the refusal itself when inside a trace
+            tracer = self.telemetry.tracer
+            if tracer.enabled and tracer.current() is not None:
+                tracer.record("breaker.skip", status="unavailable", tags={"dtn": dtn_idx})
             raise RpcUnavailable(f"dtn{dtn_idx}: circuit open")
 
     def guarded_call(self, service: str, dtn_idx: int, method: str, **kwargs: Any) -> Any:
@@ -569,16 +637,38 @@ class ServicePlane:
         :class:`LeaseHeldElsewhere` when no lease can be held, and
         :class:`RpcUnavailable` when fewer than ``write_quorum`` targets are
         reachable — an unacknowledged write (the journal keeps the intent).
+
+        The whole degraded path runs under one ``plane.quorum_create`` span
+        (status ``degraded`` on success): lease fan-out, journal intent,
+        coordinator create and quorum pushes all land in the same trace, and
+        the span is registered with the collaboration
+        (:meth:`~repro.core.cluster.Collaboration.link_trace`) so the
+        heal-time reconcile joins it as the final causal step.
         """
         prefix = prefix if prefix is not None else (path.rsplit("/", 1)[0] or "/")
+        tracer = self.telemetry.tracer
+        with tracer.span("plane.quorum_create", path=path) as sp:
+            result = self._quorum_create(path, create_kwargs, prefix)
+            if sp is not None:
+                sp.status = "degraded"
+                sp.tags.update(acks=result["acks"], coordinator=result["coordinator"])
+                link = getattr(self.collab, "link_trace", None)
+                if link is not None:
+                    link(prefix, (sp.trace_id, sp.span_id))
+            return result
+
+    def _quorum_create(
+        self, path: str, create_kwargs: Dict[str, Any], prefix: str
+    ) -> Dict[str, Any]:
         lease = self.write_lease(prefix)
         fence = lease.fence()
         journal_kw = {
             k: create_kwargs[k] for k in ("size", "sync") if k in create_kwargs
         }
-        self.journal.append(
-            path, journal_kw, epoch=self.seen_epoch(self.owner(path))
-        )
+        with self.telemetry.tracer.span("journal.intent", path=path):
+            self.journal.append(
+                path, journal_kw, epoch=self.seen_epoch(self.owner(path))
+            )
         self._journal_fences.pop(path, None)
         targets = self._quorum_targets(prefix, lease)
         entry: Optional[Dict[str, Any]] = None
@@ -1003,35 +1093,41 @@ class ServicePlane:
     def resilience_stats(self) -> Dict[str, Any]:
         """Fault-plane accounting: degraded serves, breaker activity, retry
         budget exhaustion, server-side dedup pressure, and the quorum/lease
-        write path."""
-        dtns = self.collab.dtns
+        write path.
+
+        Deprecated in favor of :meth:`telemetry_fold` /
+        ``Workspace.telemetry()``: this is now a *shim* that reads the same
+        registry fold and maps it back to the historical key names, so the
+        two surfaces can never drift apart again.  ``breaker_states`` stays
+        a direct point-in-time read (a state list, not a counter).
+        """
+        fold = self.telemetry_fold()
         return {
-            "degraded_reads": self.degraded_reads,
-            "stale_serves": self.stale_serves,
-            "breaker_skips": self.breaker_skips,
-            "breakers_opened": sum(b.opened for b in self.breakers),
+            "degraded_reads": fold.get("plane.degraded_reads", 0),
+            "stale_serves": fold.get("plane.stale_serves", 0),
+            "breaker_skips": fold.get("plane.breaker_skips", 0),
+            "breakers_opened": fold.get("plane.breakers_opened", 0),
             "breaker_states": [b.state for b in self.breakers],
             # give-ups caused specifically by an exhausted shared retry budget
             # (not per-call attempts) — distinguishes "the budget starved us"
             # from "the peer was just down"
-            "budget_exhausted": sum(c.stats.budget_exhausted for c in self.clients()),
+            "budget_exhausted": fold.get("rpc.budget_exhausted", 0),
             # server-side idempotency-window evictions: >0 means replies were
             # aged out and a late retry could re-execute — the knob to watch
             # when sizing dedup_window
-            "dedup_evictions": sum(
-                dtn.metadata_server.dedup_evictions + dtn.discovery_server.dedup_evictions
-                for dtn in dtns
-            ),
-            "fenced_rejections": sum(
-                dtn.metadata_server.fenced_rejections + dtn.discovery_server.fenced_rejections
-                for dtn in dtns
-            ),
-            "degraded_writes": self.degraded_writes,
-            "quorum_acks": self.quorum_acks,
-            "leases": self.lease_manager.stats(),
+            "dedup_evictions": fold.get("rpc.dedup_evictions", 0),
+            "fenced_rejections": fold.get("rpc.fenced_rejections", 0),
+            "degraded_writes": fold.get("plane.degraded_writes", 0),
+            "quorum_acks": fold.get("plane.quorum_acks", 0),
+            "leases": {
+                k: fold.get(f"lease.{k}", 0)
+                for k in ("acquired", "degraded_acquired", "renewed", "held")
+            },
         }
 
     def rpc_stats(self) -> Dict[str, float]:
+        """Sum of every owned client's :class:`~repro.core.rpc.RpcStats` —
+        also the source the registry's ``rpc.*`` collector pulls from."""
         agg: Dict[str, float] = {}
         for client in self.meta + self.sds:
             for k, v in client.stats.snapshot().items():

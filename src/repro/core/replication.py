@@ -553,7 +553,15 @@ class ReplicaPump:
             ship = compact_window(recs) if self.compact else [dict(r) for r in recs]
             self.records_compacted += len(recs) - len(ship)
             records, full_by_path, staged, window_max = self._encode_for_peer(p, ship)
-            if not self._ship_window(p, records, full_by_path):
+            # the pump thread has no foreground context: each window roots its
+            # own trace, and the ship RPCs (the pump plane's clients carry the
+            # same tracer) land as rpc.*/apply.* children under it
+            tracer = self.plane.telemetry.tracer
+            with tracer.span("pump.ship", peer=p, n=len(records)) as sp:
+                shipped = self._ship_window(p, records, full_by_path)
+                if not shipped and sp is not None:
+                    sp.status = "error"
+            if not shipped:
                 continue
             with self._lock:
                 if window_end > self._cursors.get(p, 0):

@@ -63,6 +63,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from .telemetry import now as _tel_now
+
 __all__ = [
     "pack",
     "pack_flat",
@@ -644,6 +646,14 @@ class RpcServer:
     mutation is refused *before* dispatch — it never reaches the service or
     the replication log.  The fenced refusal is still rid-cached so a
     retried stale mutation is refused, not re-evaluated.
+
+    Requests carrying a ``trace`` field (``[trace_id, parent_span_id]``,
+    attached by tracing clients) record a server-side span into this DTN's
+    ``telemetry`` buffer: ``apply.<method>`` (or ``apply.batch``) for
+    dispatched work, ``rpc.fenced`` with status ``fenced`` for fence-floor
+    refusals.  Dedup-window hits return the cached reply *without* a span —
+    an assembled trace therefore shows exactly one apply span per rid no
+    matter how many times the mutation was delivered.
     """
 
     def __init__(
@@ -655,6 +665,7 @@ class RpcServer:
         site: str = "",
         dedup_window: int = 1024,
         fences: Any = None,
+        telemetry: Any = None,
     ):
         self._service = service
         self.name = name
@@ -663,13 +674,28 @@ class RpcServer:
         #: dc_id this server lives in — the fault plane keys link rules on it
         self.site = site
         self.dedup_window = dedup_window
+        self.requests = 0
         self.deduped = 0
         self.dedup_evictions = 0
         #: fence-floor authority (LeaseTable) shared by this DTN's servers
         self.fences = fences
         self.fenced_rejections = 0
+        #: the DTN's Telemetry bundle (span buffer server spans land in)
+        self.telemetry = telemetry
         self._dedup: "OrderedDict[str, bytes]" = OrderedDict()
         self._lock = threading.Lock()
+
+    def _trace_ctx(self, req: Dict[str, Any]) -> Optional[Tuple[int, int]]:
+        """Parent context from the envelope, when this server traces.
+
+        The envelope carries ``trace`` as an ``[trace_id, span_id]`` int pair —
+        a single codec op on the hot path instead of a list of two."""
+        if self.telemetry is None:
+            return None
+        trace = req.get("trace")
+        if trace is None:
+            return None
+        return (trace[0], trace[1])
 
     def handle(self, request: bytes) -> bytes:
         if self.down:
@@ -677,6 +703,7 @@ class RpcServer:
         # zero-copy: bytes payloads (file writes, scidata blobs) dispatch into
         # the service as subviews of the request buffer, never re-copied
         req = unpack(request, copy=False)
+        self.requests += 1
         rid = req.get("rid")
         if rid is not None:
             with self._lock:
@@ -693,6 +720,14 @@ class RpcServer:
             str(fence.get("prefix", "/")), int(fence.get("token", 0))
         ):
             self.fenced_rejections += 1
+            ctx = self._trace_ctx(req)
+            if ctx is not None:
+                # deliberately NOT an ``apply.*`` name: a fenced trace tree
+                # must show the refusal with no shard-apply child
+                self.telemetry.tracer.record(
+                    "rpc.fenced", parent=ctx, status="fenced",
+                    tags={"rid": rid, "prefix": fence.get("prefix")},
+                )
             reply = {
                 "ok": False,
                 "fenced": True,
@@ -711,6 +746,8 @@ class RpcServer:
                         self._dedup.popitem(last=False)
                         self.dedup_evictions += 1
             return out
+        ctx = self._trace_ctx(req)
+        t_apply = _tel_now() if ctx is not None else 0.0
         if "batch" in req:
             # One channel round-trip, N operations, executed strictly in list
             # order on this server.  Each op gets its own ok/error slot so one
@@ -718,6 +755,15 @@ class RpcServer:
             reply = {"ok": True, "results": [self._dispatch(op) for op in req["batch"]]}
         else:
             reply = self._dispatch(req)
+        if ctx is not None:
+            name = "apply.batch" if "batch" in req else f"apply.{req.get('method')}"
+            self.telemetry.tracer.record(
+                name,
+                parent=ctx,
+                status="ok" if reply.get("ok", True) else "error",
+                start=t_apply,
+                tags={"rid": rid} if rid is not None else None,
+            )
         if self.clock is not None:
             # the freshness bar: this origin's own last mutation, not the
             # merged Lamport value (see EpochClock.last_local)
@@ -800,6 +846,8 @@ class RpcClient:
         site: str = "",
         retry: Optional[RetryPolicy] = None,
         faults: Optional[Callable[[], Any]] = None,
+        tracer: Any = None,
+        metrics: Any = None,
     ):
         self._server = server
         self.channel = channel
@@ -809,6 +857,11 @@ class RpcClient:
         self.site = site
         self.retry = retry
         self._faults = faults
+        #: plane Tracer — when set and a trace context is active on this
+        #: thread, every round-trip records a client span and propagates
+        #: ``trace=[tid, sid]`` on the envelope (next to epoch/rid/fence)
+        self.tracer = tracer
+        self._lat_hist = metrics.histogram("rpc.call_seconds") if metrics is not None else None
         #: highest epoch witnessed in this server's reply envelopes — the
         #: session-consistency bar for replica reads of rows it originates
         self.last_epoch = 0
@@ -899,16 +952,30 @@ class RpcClient:
             # what the server's dedup window keys exactly-once on
             self._rid_seq += 1
             message = dict(message, rid=f"{self._rid_prefix}.{self._rid_seq}")
+        tracer = self.tracer
+        span = None
+        if tracer is not None and tracer.enabled:
+            parent = tracer.current()
+            if parent is not None:
+                # leaf span, never on the context stack: server-side children
+                # parent to it through the envelope, not thread-locals
+                span = tracer.start_span(
+                    f"rpc.{message.get('method') or 'batch'}", parent=parent
+                )
+                message = dict(message, trace=[span.trace_id, span.span_id])
         frame = self._frame
         del frame[:]
         _pack_into(frame, message)
         request = bytes(frame)
         t1 = time.perf_counter()
+        retried = False
         if policy is None:
             try:
                 response, wire = self._transmit(request, defer_wire)
             except RpcUnavailable:
                 self.stats.failures += 1
+                if span is not None:
+                    tracer.finish(span, status="unavailable")
                 raise
         else:
             deadline = t1 + policy.deadline_s
@@ -931,8 +998,14 @@ class RpcClient:
                         self.stats.failures += 1
                         if out_of_budget:
                             self.stats.budget_exhausted += 1
+                        if span is not None:
+                            if span.tags is None:
+                                span.tags = {}
+                            span.tags["attempts"] = attempt
+                            tracer.finish(span, status="unavailable")
                         raise
                     attempt += 1
+                    retried = True
                     self._retry_budget -= 1
                     self.stats.retries += 1
                     if backoff > 0:
@@ -949,6 +1022,13 @@ class RpcClient:
         self.stats.bytes_received += len(response)
         self.stats.pack_seconds += (t1 - t0) + (t3 - t2)
         self.stats.wire_seconds += wire
+        if span is not None:
+            status = "fenced" if resp.get("fenced") else ("retried" if retried else "ok")
+            tracer.finish(span, status=status, wire_s=wire)
+        if self._lat_hist is not None:
+            # deferred wire is modeled, not slept — fold it into the observed
+            # latency so histograms reflect the wall-clock a real WAN would pay
+            self._lat_hist.observe((t3 - t0) + (wire if defer_wire else 0.0))
         return resp, (wire if defer_wire else 0.0)
 
     def call(self, method: str, **kwargs: Any) -> Any:

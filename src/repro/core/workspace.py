@@ -46,6 +46,7 @@ later export metadata with :class:`~repro.core.meu.MEU`.
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -102,6 +103,31 @@ def _norm(path: str) -> str:
     return path
 
 
+def _traced(name: str):
+    """Mint (or continue) a trace around a Workspace entry point.
+
+    Every public operation runs under a span named ``ws.<op>``; with no
+    active context on the thread this starts a new trace (whose id the
+    plane tracer remembers as ``last_trace``), and RPCs issued inside
+    propagate ``[trace_id, span_id]`` on their envelopes so server-side
+    spans land in the same tree.  ``trace_enabled=False`` short-circuits
+    to a plain call.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            tracer = self.plane.telemetry.tracer
+            if not tracer.enabled:
+                return fn(self, *args, **kwargs)
+            if args and isinstance(args[0], str):
+                with tracer.span(name, path=args[0]):
+                    return fn(self, *args, **kwargs)
+            with tracer.span(name):
+                return fn(self, *args, **kwargs)
+        return wrapper
+    return deco
+
+
 class Workspace:
     """A collaborator's mounted view of the collaboration (``/mnt/scifs``)."""
 
@@ -133,6 +159,9 @@ class Workspace:
         failover: bool = True,
         write_quorum: Optional[int] = None,
         lease_ttl_s: Optional[float] = None,
+        trace_enabled: Optional[bool] = None,
+        trace_buffer_spans: Optional[int] = None,
+        hist_buckets: Optional[int] = None,
     ):
         """``stripe_bytes`` / ``data_lanes`` shape the striped multi-lane
         transfer (0 / 1 restore the single-shot path); ``chunk_cache_bytes``
@@ -184,9 +213,17 @@ class Workspace:
             plane_kwargs["write_quorum"] = write_quorum
         if lease_ttl_s is not None:
             plane_kwargs["lease_ttl_s"] = lease_ttl_s
+        if trace_enabled is not None:
+            plane_kwargs["trace_enabled"] = trace_enabled
+        if trace_buffer_spans is not None:
+            plane_kwargs["trace_buffer_spans"] = trace_buffer_spans
+        if hist_buckets is not None:
+            plane_kwargs["hist_buckets"] = hist_buckets
         self.plane = ServicePlane(collab, home_dc, **plane_kwargs)
         # The data plane: every cross-DC byte moves through it (striped
         # lanes + chunk cache + read-ahead); home-DC bytes stay direct.
+        # It shares the plane's tracer + registry, so striped lanes and
+        # prefetches land in the same traces as the metadata RPCs.
         self.datapath = DataPath(
             collab,
             home_dc,
@@ -195,7 +232,10 @@ class Workspace:
             chunk_cache_bytes=chunk_cache_bytes,
             readahead=readahead,
             retry=retry,
+            tracer=self.plane.telemetry.tracer,
+            metrics=self.plane.telemetry.registry,
         )
+        self.plane.telemetry.add_collector("datapath", self.datapath.stats_flat)
         # our own metadata publications must not evict our own freshly
         # written-through chunks
         self.plane.attach_cache(self.datapath.cache)
@@ -217,6 +257,7 @@ class Workspace:
         return int(entry.get("epoch", 0) or 0) if entry else 0
 
     # -- POSIX-like surface ---------------------------------------------------
+    @_traced("ws.write")
     def write(self, path: str, data: bytes) -> int:
         """The five-op FUSE sequence + data-plane write + SDS coupling."""
         path = _norm(path)
@@ -308,6 +349,9 @@ class Workspace:
             size=len(data),
         )
         res = plane.quorum_create(path, create_kw)
+        # the write succeeded, but through the quorum path — mark the
+        # enclosing ws.write span so the trace tells the whole story
+        plane.telemetry.tracer.annotate(status="degraded")
         entry = dict(res["entry"])
         backend = self.collab.dc(self.home_dc).backend
         backend.write(path, data, owner=self.collaborator)
@@ -361,10 +405,12 @@ class Workspace:
             self.plane.sds_call(dtn.dtn_id, "enqueue_index", path=path, dc_id=dtn.dc_id)
         # NONE / LW_OFFLINE: nothing in the write path
 
+    @_traced("ws.flush")
     def flush(self) -> int:
         """Commit write-back metadata updates (one batched RPC per DTN)."""
         return self.plane.flush()
 
+    @_traced("ws.read")
     def read(self, path: str) -> bytes:
         """Whole-file read: home-DC files straight off the PFS, remote files
         through the data plane (striped lanes, chunk-cache hits at
@@ -378,16 +424,19 @@ class Workspace:
             return self.collab.dc(dc_id).backend.read(path)
         return self.datapath.read(dc_id, path, epoch=self._entry_epoch(entry))
 
+    @_traced("ws.stat")
     def stat(self, path: str) -> Optional[Dict[str, Any]]:
         """Attribute lookup; a plane-cache hit costs zero RPCs."""
         return self.plane.stat(_norm(path))
 
+    @_traced("ws.exists")
     def exists(self, path: str) -> bool:
         path = _norm(path)
         if not self.plane.cache.is_miss(self.plane.cache.get(path)):
             return True
         return bool(self.plane.meta_call(self._owner(path), "lookup", path=path))
 
+    @_traced("ws.mkdir")
     def mkdir(self, path: str) -> None:
         path = _norm(path)
         dtn = self._dtn(path)
@@ -494,6 +543,7 @@ class Workspace:
             merged = [dict(e, stale=True) for e in merged]
         return merged
 
+    @_traced("ws.ls")
     def ls(self, path: str = "/") -> List[Dict[str, Any]]:
         """Scatter-gather listings (§III-B1), bounded fan-out; with
         ``prefer_replica`` only the home-DC replicas are contacted (full
@@ -511,6 +561,7 @@ class Workspace:
                 return self._degraded_listing("list_dir", kw, exc)
         return self._merge_listing(per_dtn)
 
+    @_traced("ws.find")
     def find(self, prefix: str = "/") -> List[Dict[str, Any]]:
         """Recursive listing (global view of all shared datasets)."""
         prefix = _norm(prefix)
@@ -524,6 +575,7 @@ class Workspace:
                 return self._degraded_listing("list_all", kw, exc)
         return self._merge_listing(per_dtn)
 
+    @_traced("ws.delete")
     def delete(self, path: str) -> None:
         """Owner-only removal (the paper defers remote removal; §III-B1)."""
         path = _norm(path)
@@ -542,6 +594,7 @@ class Workspace:
             dc.backend.delete(path)
 
     # -- scientific data + discovery ----------------------------------------------
+    @_traced("ws.write_scidata")
     def write_scidata(self, path: str, arrays: Dict[str, np.ndarray], attrs: Dict[str, Any]) -> int:
         """Write a self-describing dataset through the workspace."""
         return self.write(path, serialize_scidata(arrays, attrs))
@@ -584,6 +637,7 @@ class Workspace:
                 entry["dc_id"], path, ranges, epoch=self._entry_epoch(entry)
             )
 
+    @_traced("ws.read_attrs")
     def read_attrs(self, path: str) -> Dict[str, Any]:
         path = _norm(path)
         entry = self.stat(path)
@@ -593,6 +647,7 @@ class Workspace:
         self._readahead(entry, path, sci, after=None)
         return sci.attrs
 
+    @_traced("ws.read_dataset")
     def read_dataset(self, path: str, name: str) -> np.ndarray:
         path = _norm(path)
         entry = self.stat(path)
@@ -604,6 +659,7 @@ class Workspace:
         self._readahead(entry, path, sci, after=name)
         return arr
 
+    @_traced("ws.tag")
     def tag(self, path: str, name: str, value: Any) -> None:
         """Manual attribute tagging (§III-B5).  When the owning shard is
         unreachable the tag is accepted at a reachable home-DC shard in
@@ -632,6 +688,7 @@ class Workspace:
                     continue
             raise exc
 
+    @_traced("ws.search")
     def search(self, query: str) -> List[Dict[str, Any]]:
         """Attribute query via the scatter-gather planner (§III-B5).
 
@@ -790,19 +847,44 @@ class Workspace:
         return [e["path"] for e in self.search(query)]
 
     # -- accounting -----------------------------------------------------------------
+    def telemetry(self) -> Dict[str, Any]:
+        """Single unified scrape of every counter this workspace can see.
+
+        Folds the client plane's own registry (``rpc.*``, ``plane.*``,
+        ``attrcache.*``, ``lease.*``, ``datapath.*``) with the cluster-wide
+        fold from :meth:`Collaboration.observe` (per-DTN ``rpc.*`` server
+        counters, ``lease.*`` grant tables, ``meta.*``, ``sds.*``,
+        ``replication.*``, ``faults.*``).  Keys are flat dotted metric
+        names; histogram-valued metrics appear as snapshot dicts with
+        ``p50``/``p99``.  This is the supported scrape surface — the
+        per-subsystem ``*_stats()`` accessors below are retained as
+        compatibility shims over the same registry data.
+        """
+        return self.plane.telemetry_fold()
+
     def rpc_stats(self) -> Dict[str, float]:
+        """Deprecated shim — prefer :meth:`telemetry` (``rpc.*`` keys)."""
         return self.plane.rpc_stats()
 
     def cache_stats(self) -> Dict[str, int]:
+        """Deprecated shim — prefer :meth:`telemetry` (``attrcache.*``)."""
         return self.plane.cache.stats()
 
     def resilience_stats(self) -> Dict[str, Any]:
-        """Degraded-mode + breaker accounting (see ServicePlane)."""
+        """Degraded-mode + breaker accounting (see ServicePlane).
+
+        Deprecated shim — answers are folded from the same telemetry
+        registry that backs :meth:`telemetry`; historical key names are
+        preserved for existing callers.
+        """
         return self.plane.resilience_stats()
 
     def data_stats(self) -> Dict[str, Any]:
         """Data-plane accounting: transfers, bytes, wire time, chunk-cache
-        hit/miss/invalidation counters, prefetch activity."""
+        hit/miss/invalidation counters, prefetch activity.
+
+        Deprecated shim — prefer :meth:`telemetry` (``datapath.*`` keys).
+        """
         return self.datapath.stats()
 
     def close(self) -> None:
